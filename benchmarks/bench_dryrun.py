@@ -1,0 +1,51 @@
+"""Dry-run roofline table: three terms per (arch x shape), single-pod mesh.
+
+Reads results/dryrun/*.json produced by repro.launch.dryrun (re-run any
+missing cells with `python -m repro.launch.dryrun`).
+"""
+import glob
+import json
+import os
+
+from repro.launch.dryrun import RESULTS_DIR, roofline_from_cell
+
+
+def rows(mesh="single"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("status") == "skipped":
+            out.append({"arch": cell["arch"], "shape": cell["shape"],
+                        "status": "skipped", "reason": cell["reason"]})
+            continue
+        rep = roofline_from_cell(cell)
+        if rep is None:
+            out.append({"arch": cell["arch"], "shape": cell["shape"],
+                        "status": cell.get("status", "?")})
+            continue
+        out.append({"status": "ok", **rep.row()})
+    return out
+
+
+def main(csv=True):
+    rs = rows()
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rs:
+            tag = f"dryrun_{r['arch']}_{r['shape']}"
+            if r["status"] != "ok":
+                print(f"{tag},0,{r['status']}")
+                continue
+            dom = r["dominant"]
+            t = max(r["t_compute_ms"], r["t_memory_ms"],
+                    r["t_collective_ms"])
+            print(f"{tag},{t*1e3:.0f},"
+                  f"dom={dom} rf={r['roofline_frac']:.2f} "
+                  f"useful={r['useful_ratio']:.2f} "
+                  f"hbm={r['hbm_gb_per_device']:.1f}GB")
+    return rs
+
+
+if __name__ == "__main__":
+    main()

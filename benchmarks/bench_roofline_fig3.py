@@ -1,0 +1,36 @@
+"""Paper Fig. 3: per-workload roofline comparison on classic CNN layers."""
+from repro.sim import CLASSIC, eyeriss, simulate, tpu, vectormesh
+
+
+def rows(n_pe=512):
+    out = []
+    for w in CLASSIC:
+        row = {"workload": w.name}
+        for name, mk in (("tpu", tpu), ("eyeriss", eyeriss),
+                         ("vectormesh", vectormesh)):
+            r = simulate(mk(n_pe), w)
+            row[f"{name}_gmacs"] = round(r.gmacs, 2)
+            row[f"{name}_frac"] = round(r.roofline_frac, 2)
+            row["roofline"] = round(r.roofline_gmacs, 2)
+        out.append(row)
+    return out
+
+
+def main(csv=True):
+    rs = rows()
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rs:
+            print(f"fig3_{r['workload']},0,"
+                  f"vm={r['vectormesh_gmacs']}/{r['roofline']} "
+                  f"ey={r['eyeriss_gmacs']} tpu={r['tpu_gmacs']}")
+    # Fig 3 claim: VectorMesh closest to the roofline on average
+    vm = sum(r["vectormesh_frac"] for r in rs) / len(rs)
+    ey = sum(r["eyeriss_frac"] for r in rs) / len(rs)
+    tp = sum(r["tpu_frac"] for r in rs) / len(rs)
+    assert vm >= ey and vm >= tp, (vm, ey, tp)
+    return rs
+
+
+if __name__ == "__main__":
+    main()

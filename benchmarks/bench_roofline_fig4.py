@@ -1,0 +1,32 @@
+"""Paper Fig. 4: VectorMesh-exclusive workloads (modern CNN + spatial
+matching) against the roofline."""
+from repro.sim import GEMM, MODERN, SPATIAL, simulate, vectormesh
+
+
+def rows(n_pe=512):
+    out = []
+    for w in MODERN + SPATIAL + GEMM:
+        r = simulate(vectormesh(n_pe), w)
+        out.append({"workload": w.name, "family": w.family,
+                    "gmacs": round(r.gmacs, 2),
+                    "roofline": round(r.roofline_gmacs, 2),
+                    "frac": round(r.roofline_frac, 2)})
+    return out
+
+
+def main(csv=True):
+    rs = rows()
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rs:
+            print(f"fig4_{r['workload']},0,{r['gmacs']}/{r['roofline']} "
+                  f"GMAC/s ({r['frac']})")
+    # memory-bound layers reach their (low) roofline; compute-bound layers
+    # reach a high fraction of peak
+    dw = next(r for r in rs if r["workload"] == "MBN_DW_S1")
+    assert dw["frac"] > 0.4
+    return rs
+
+
+if __name__ == "__main__":
+    main()

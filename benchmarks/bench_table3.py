@@ -1,0 +1,42 @@
+"""Paper Table III: normalized GLB/DRAM access + performance, 128/512 PEs."""
+from repro.sim import CLASSIC, eyeriss, simulate, summarize, tpu, vectormesh
+
+PAPER = {  # (norm GLB, norm DRAM, perf GOPS)
+    (128, "tpu"): (935, 239, 10), (128, "eyeriss"): (160, 85, 12),
+    (128, "vectormesh"): (42, 45, 20),
+    (512, "tpu"): (534, 71, 27), (512, "eyeriss"): (55, 28, 41),
+    (512, "vectormesh"): (29, 32, 68),
+}
+
+
+def rows():
+    out = []
+    for n_pe in (128, 512):
+        for name, mk in (("tpu", tpu), ("eyeriss", eyeriss),
+                         ("vectormesh", vectormesh)):
+            s = summarize([simulate(mk(n_pe), w) for w in CLASSIC])
+            pg, pd, pp = PAPER[(n_pe, name)]
+            out.append({
+                "arch": name, "n_pe": n_pe,
+                "glb": round(s["norm_glb"], 1), "glb_paper": pg,
+                "dram": round(s["norm_dram"], 1), "dram_paper": pd,
+                "gmacs": round(s["gmacs"], 1), "gmacs_paper": pp,
+                "roofline_frac": round(s["roofline_frac"], 2),
+            })
+    return out
+
+
+def main(csv=True):
+    rs = rows()
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rs:
+            tag = f"table3_{r['arch']}_{r['n_pe']}pe"
+            print(f"{tag}_glb,0,{r['glb']} (paper {r['glb_paper']})")
+            print(f"{tag}_dram,0,{r['dram']} (paper {r['dram_paper']})")
+            print(f"{tag}_gmacs,0,{r['gmacs']} (paper {r['gmacs_paper']})")
+    return rs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows for: Table III (traffic + perf), Fig. 3 (classic rooflines),
+# Fig. 4 (exclusive workloads), the Pallas kernel micro-bench, and the
+# 40-cell dry-run roofline table.
+import io
+import sys
+from contextlib import redirect_stdout
+
+
+def main() -> None:
+    from benchmarks import (bench_dryrun, bench_kernels, bench_roofline_fig3,
+                            bench_roofline_fig4, bench_table3)
+    print("name,us_per_call,derived")
+    for mod in (bench_table3, bench_roofline_fig3, bench_roofline_fig4,
+                bench_kernels, bench_dryrun):
+        buf = io.StringIO()
+        with redirect_stdout(buf):
+            mod.main(csv=True)
+        for line in buf.getvalue().splitlines():
+            if line and not line.startswith("name,"):
+                print(line)
+        sys.stdout.flush()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: the paper's scheduling methodology end-to-end on one GEMM.
+
+1. Formulate C = A @ B as an NDRange tensor op (paper Eq. 1).
+2. Search the bandwidth-minimizing TEU tile (Eq. 4).
+3. Plan FIFO-mesh data exchange on a 4x4 TEU mesh (Fig. 2).
+4. Lower the same schedule to a Pallas TPU kernel and validate vs jnp.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (TEU_BUFFER, matmul_op, plan_mesh_exchange,
+                        order_grid_for_sharing, search_tiles)
+from repro.core.pallas_bridge import matmul_block_shapes
+from repro.kernels import ops, ref
+
+# 1. NDRange form
+op = matmul_op(1024, 1024, 1024)
+print(f"workload: {op.name}, {op.total_macs()/1e6:.0f} MMACs")
+
+# 2. TEU tile (paper hardware: 2x16KB inputs, 5KB PSums, 32 PEs)
+sched = search_tiles(op, TEU_BUFFER)
+print(f"TEU tile: {sched.tile}  -> {sched.bytes_per_mac:.4f} bytes/MAC")
+
+# 3. FIFO-mesh exchange on a 4x4 mesh of TEUs
+plan = plan_mesh_exchange(op, sched.tile, (4, 4))
+print(f"exchange: share A along '{plan.row_axis}', B along "
+      f"'{plan.col_axis}' -> {plan.sharing_factor:.1f}x fewer GLB fetches, "
+      f"{plan.fifo_hop_bytes/1e6:.1f} MB over FIFOs instead")
+
+# 4. The same schedule on TPU: MXU-aligned blocks + VMEM residency order
+order = order_grid_for_sharing(op, sched.tile)
+print(f"grid order (VMEM residency): {order.order}")
+bm, bn, bk = matmul_block_shapes(1024, 1024, 1024)
+print(f"Pallas blocks (VMEM-budget tile search): ({bm}, {bn}, {bk})")
+
+a = jnp.asarray(np.random.default_rng(0).normal(size=(256, 256)), jnp.float32)
+b = jnp.asarray(np.random.default_rng(1).normal(size=(256, 256)), jnp.float32)
+out = ops.matmul(a, b, block_m=64, block_n=64, block_k=64)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref.matmul_ref(a, b)),
+                           rtol=1e-4, atol=1e-4)
+print("Pallas kernel (interpret mode) matches the jnp oracle — done.")

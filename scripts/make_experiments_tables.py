@@ -1,0 +1,72 @@
+"""Generate the EXPERIMENTS.md roofline tables from results/dryrun[*]/."""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun import roofline_from_cell  # noqa: E402
+
+
+def load(dirname, mesh):
+    rows = {}
+    for path in sorted(glob.glob(os.path.join(dirname, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        key = (cell["arch"], cell["shape"])
+        if cell.get("status") == "skipped":
+            rows[key] = {"status": "skipped"}
+            continue
+        rep = roofline_from_cell(cell)
+        if rep is None:
+            rows[key] = {"status": cell.get("status", "?")}
+            continue
+        rows[key] = {"status": "ok", "rep": rep, "cell": cell}
+    return rows
+
+
+def fmt_row(arch, shape, r, base=None):
+    if r["status"] != "ok":
+        return f"| {arch} | {shape} | — | — | — | — | skip | — | — |"
+    rep = r["rep"]
+    t = (rep.t_compute, rep.t_memory, rep.t_collective)
+    dom = rep.dominant[:4]
+    hbm = r["cell"]["memory_analysis"]["peak_gb_per_device"]
+    delta = ""
+    if base is not None and base.get("status") == "ok":
+        b = base["rep"]
+        tb = max(b.t_compute, b.t_memory, b.t_collective)
+        tn = max(t)
+        delta = f" ({tb/tn:.1f}x)" if tb/tn > 1.04 or tb/tn < 0.96 else " (=)"
+    return (f"| {arch} | {shape} | {t[0]:.2f} | {t[1]:.2f} | {t[2]:.2f} "
+            f"| {dom} | {rep.roofline_frac:.3f}{delta} "
+            f"| {rep.useful_flops_ratio:.2f} | {hbm:.1f} |")
+
+
+def main():
+    opt = load("results/dryrun", "single")
+    base = load("results/dryrun_baseline_snapshot", "single")
+    print("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dom "
+          "| roofline frac (gain) | useful | HBM GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape), r in sorted(opt.items()):
+        print(fmt_row(arch, shape, r, base.get((arch, shape))))
+
+    print()
+    print("multi-pod (2x16x16 = 512 chips) — compile/fit proof:")
+    multi = load("results/dryrun", "multi")
+    print("| arch | shape | status | HBM GB/dev | t_dom (s) |")
+    print("|---|---|---|---|---|")
+    for (arch, shape), r in sorted(multi.items()):
+        if r["status"] != "ok":
+            print(f"| {arch} | {shape} | {r['status']} | — | — |")
+            continue
+        rep = r["rep"]
+        hbm = r["cell"]["memory_analysis"]["peak_gb_per_device"]
+        tdom = max(rep.t_compute, rep.t_memory, rep.t_collective)
+        print(f"| {arch} | {shape} | ok | {hbm:.1f} | {tdom:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from .roofline import (HBM_BW, ICI_BW, PEAK_FLOPS, RooflineReport,
+                       collective_bytes, model_flops_decode,
+                       model_flops_train)
+
+__all__ = ["HBM_BW", "ICI_BW", "PEAK_FLOPS", "RooflineReport",
+           "collective_bytes", "model_flops_decode", "model_flops_train"]

@@ -1,0 +1,284 @@
+"""Scan-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes
+scan-over-layers models look ~L x cheaper than they are. This parser walks
+the HLO module, multiplies loop bodies by their ``known_trip_count`` (XLA
+annotates it in backend_config), and produces three totals per module:
+
+  * flops            — 2*prod(out)*prod(contracted) per dot (+ convolutions)
+  * traffic bytes    — per top-level op: operands + outputs, fusion
+                        internals ignored (they live in registers/VMEM),
+                        dynamic-(update-)slice counted at slice size
+  * collective bytes — output bytes of all-gather/all-reduce/reduce-scatter/
+                        all-to-all/collective-permute, x enclosing trip counts
+
+All three are PER-DEVICE quantities when the module was SPMD-partitioned
+(shapes in optimized HLO are already the per-partition shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*{")
+_TRIP_RE = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "reshape", "after-all", "partition-id",
+               "replica-id", "iota", "broadcast"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # operand list + attrs
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list[_Op]
+    symtab: dict[str, str]     # value name -> shape string
+
+
+def parse_module(hlo: str) -> dict[str, _Computation]:
+    comps: dict[str, _Computation] = {}
+    cur: _Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if line.endswith("{") and "->" in line:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = _Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, rest = m.groups()
+        cur.ops.append(_Op(name, shape, opcode, rest))
+        cur.symtab[name] = shape
+    return comps
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes: float
+    collective_bytes: float
+    collectives: dict[str, float]
+
+
+def _dot_flops(op: _Op, symtab: dict[str, str]) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.shape):
+        out_elems *= d
+    mc = _CONTRACT_RE.search(op.rest)
+    operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+    contracted = 1
+    if mc and operands:
+        lhs_shape = symtab.get(operands[0], "")
+        dims = _shape_dims(lhs_shape)
+        for idx in (int(i) for i in mc.group(1).split(",") if i):
+            if idx < len(dims):
+                contracted *= dims[idx]
+    return 2.0 * out_elems * contracted
+
+
+def _conv_flops(op: _Op, symtab: dict[str, str]) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.shape):
+        out_elems *= d
+    operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+    k_elems = 1
+    kdims = _shape_dims(symtab.get(operands[1], "")) if len(operands) > 1 \
+        else []
+    for d in kdims:
+        k_elems *= d
+    ofeat = kdims[-1] if kdims else 1        # HWIO convention
+    return 2.0 * out_elems * (k_elems / max(1, ofeat))
+
+
+def _fusion_input_bytes(comp: _Computation) -> float:
+    """Bytes a fused computation actually READS.
+
+    A fusion operand that is only consumed by dynamic-slice ops inside the
+    fusion contributes the SLICE bytes, not the full array — this is what
+    keeps scan-over-stacked-params models from looking like they re-stream
+    the whole parameter stack every layer.
+    """
+    params: dict[str, str] = {}
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            params[op.name] = op.shape
+    # consumers
+    sliced_bytes: dict[str, float] = {}
+    full_needed: set[str] = set()
+    for op in comp.ops:
+        if op.opcode == "parameter":
+            continue
+        for o in _OPERAND_RE.findall(op.rest.split(")")[0]):
+            if o not in params:
+                continue
+            if op.opcode == "dynamic-slice":
+                sliced_bytes[o] = sliced_bytes.get(o, 0.0) + \
+                    _shape_bytes(op.shape)
+            else:
+                full_needed.add(o)
+    total = 0.0
+    for name, shape in params.items():
+        if name in full_needed or name not in sliced_bytes:
+            total += _shape_bytes(shape)
+        else:
+            total += sliced_bytes[name]
+    return total
+
+
+def _op_bytes(op: _Op, symtab: dict[str, str]) -> float:
+    if op.opcode in _SKIP_BYTES:
+        return 0.0
+    out_b = _shape_bytes(op.shape)
+    if op.opcode in ("dynamic-slice",):
+        return 2.0 * out_b
+    if op.opcode in ("dynamic-update-slice",):
+        # read+write of the update slice; locate the update operand (2nd)
+        operands = _OPERAND_RE.findall(op.rest.split(")")[0])
+        upd = _shape_bytes(symtab.get(operands[1], "")) if len(operands) > 1 \
+            else out_b
+        return 2.0 * upd
+    in_b = 0.0
+    for o in _OPERAND_RE.findall(op.rest.split(")")[0]):
+        in_b += _shape_bytes(symtab.get(o, ""))
+    return out_b + in_b
+
+
+def _cost_of(comp_name: str, comps: dict[str, _Computation],
+             memo: dict[str, HloCost]) -> HloCost:
+    if comp_name in memo:
+        return memo[comp_name]
+    comp = comps.get(comp_name)
+    if comp is None:
+        return HloCost(0, 0, 0, {})
+    fl = by = cb = 0.0
+    cd: dict[str, float] = {}
+    for op in comp.ops:
+        if op.opcode == "dot":
+            fl += _dot_flops(op, comp.symtab)
+            by += _op_bytes(op, comp.symtab)
+        elif op.opcode == "convolution":
+            fl += _conv_flops(op, comp.symtab)
+            by += _op_bytes(op, comp.symtab)
+        elif op.opcode == "while":
+            trip = 1
+            mt = _TRIP_RE.search(op.rest)
+            if mt:
+                trip = int(mt.group(1))
+            body = _CALL_RE.search(op.rest)
+            cond = _COND_RE.search(op.rest)
+            if body:
+                sub = _cost_of(body.group(1), comps, memo)
+                fl += trip * sub.flops
+                by += trip * sub.bytes
+                cb += trip * sub.collective_bytes
+                for k, v in sub.collectives.items():
+                    cd[k] = cd.get(k, 0.0) + trip * v
+            if cond:
+                sub = _cost_of(cond.group(1), comps, memo)
+                fl += trip * sub.flops
+                by += trip * sub.bytes
+        elif op.opcode in ("fusion", "call", "custom-call", "reduce",
+                           "sort", "scatter", "map", "reduce-window",
+                           "select-and-scatter"):
+            m = _CALL_RE.search(op.rest)
+            if op.opcode == "fusion" and m and m.group(1) in comps:
+                by += _shape_bytes(op.shape) + \
+                    _fusion_input_bytes(comps[m.group(1)])
+            else:
+                by += _op_bytes(op, comp.symtab)
+            if m:
+                sub = _cost_of(m.group(1), comps, memo)
+                fl += sub.flops               # dots inside fusions count
+                cb += sub.collective_bytes
+                for k, v in sub.collectives.items():
+                    cd[k] = cd.get(k, 0.0) + v
+        elif op.opcode == "conditional":
+            by += _op_bytes(op, comp.symtab)
+            m = _BRANCH_RE.search(op.rest)
+            if m:
+                for b in _OPERAND_RE.findall(m.group(1)):
+                    sub = _cost_of(b, comps, memo)
+                    fl += sub.flops
+                    by += sub.bytes
+                    cb += sub.collective_bytes
+        elif op.opcode in _COLLECTIVES:
+            b = _shape_bytes(op.shape)
+            cb += b
+            cd[op.opcode] = cd.get(op.opcode, 0.0) + b
+            by += _op_bytes(op, comp.symtab)
+        else:
+            by += _op_bytes(op, comp.symtab)
+    out = HloCost(fl, by, cb, cd)
+    memo[comp_name] = out
+    return out
+
+
+def module_cost(hlo: str) -> HloCost:
+    comps = parse_module(hlo)
+    entry = None
+    for raw in hlo.splitlines():
+        if raw.startswith("ENTRY"):
+            m = _COMP_RE.match(raw.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:  # fall back: largest computation
+        entry = max(comps, key=lambda c: len(comps[c].ops)) if comps else ""
+    memo: dict[str, HloCost] = {}
+    # fusion computations are reachable from entry; memoization keeps this
+    # linear in module size.
+    return _cost_of(entry, comps, memo)

@@ -1,0 +1,144 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh):
+    compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+    collective = collective_bytes / (chips * 50e9 B/s per ICI link)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+are NOT in cost_analysis — we parse the optimized HLO text and sum operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops. MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE)
+per step gives the useful-compute ratio (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (per chip, one direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[4,128]' -> 1024. Tuples handled by the caller via findall."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum OUTPUT shape bytes of every collective op in optimized HLO."""
+    out: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # ops look like: `%x = bf16[..]{..} all-gather(...)`, fusions don't
+        # contain collectives so a substring match on the op name is safe.
+        m = re.search(r"=\s+(\(?[a-z0-9_\[\],\s{}:#\"\/\.\-]*?\)?)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)", s)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        out[opname] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict[str, int]
+    model_flops: float
+    bytes_per_device: float     # peak HBM from memory_analysis
+    model_bytes: float = 0.0    # analytic HBM traffic floor (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / max(1.0, self.hlo_flops)
+
+    @property
+    def t_model_min(self) -> float:
+        """Theoretical floor: max of the model's compute time at peak and
+        its minimum HBM traffic at full bandwidth (decode shapes are
+        memory-floor-bound; train shapes compute-floor-bound)."""
+        return max(self.model_flops / (self.chips * PEAK_FLOPS),
+                   self.model_bytes / (self.chips * HBM_BW))
+
+    @property
+    def roofline_frac(self) -> float:
+        """useful work / the time the dominant term implies at peak."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.t_model_min / t
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_gflops": self.hlo_flops / 1e9,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_gbytes": self.coll_bytes / 1e9,
+            "t_compute_ms": self.t_compute * 1e3,
+            "t_memory_ms": self.t_memory * 1e3,
+            "t_collective_ms": self.t_collective * 1e3,
+            "dominant": self.dominant,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_frac": self.roofline_frac,
+            "hbm_gb_per_device": self.bytes_per_device / 1e9,
+            "coll_breakdown": {k: v for k, v in
+                               self.coll_breakdown.items() if v},
+        }
+
+
+def model_flops_train(n_active_params: int, tokens: int) -> float:
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_decode(n_active_params: int, tokens: int,
+                       kv_read_flops: float = 0.0) -> float:
+    return 2.0 * n_active_params * tokens + kv_read_flops

@@ -1,0 +1,178 @@
+"""Architecture bundles: one uniform interface over all model families.
+
+A bundle wires a model family (transformer / mamba2 / recurrentgemma /
+whisper) to the launcher, dry-run, trainer and server:
+
+  * ``abstract_params()``        — ShapeDtypeStruct tree (no allocation)
+  * ``forward(params, batch)``   — training forward, (logits, aux)
+  * ``prefill/decode_step``      — serving steps
+  * ``input_specs(shape)``       — ShapeDtypeStruct batch for a named shape
+  * ``step_kind(shape)``         — which step function the shape lowers
+  * ``supports(shape)``          — long_500k only for sub-quadratic archs
+
+SHAPES (assignment): train_4k (4096 x 256, train_step), prefill_32k
+(32768 x 32, prefill), decode_32k (one token, 32k cache, batch 128),
+long_500k (one token, 524288 context, batch 1; SSM/hybrid only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    arch_id: str
+    kind: str                   # dense | moe | vlm | ssm | audio | hybrid
+    cfg: Any
+    family: Any                 # model module
+    sub_quadratic: bool = False
+    kv_dtype_decode: Any = None  # e.g. jnp.int8 for big dense decode
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    # -- params ------------------------------------------------------------
+    def init_params(self, key: jax.Array):
+        return self.family.init_params(self.cfg, key)
+
+    def abstract_params(self):
+        return jax.eval_shape(
+            lambda k: self.family.init_params(self.cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    def param_count(self) -> int:
+        return self.cfg.param_count()
+
+    def active_param_count(self) -> int:
+        if hasattr(self.cfg, "active_param_count"):
+            return self.cfg.active_param_count()
+        return self.param_count()
+
+    # -- steps ---------------------------------------------------------------
+    def forward(self, params, batch):
+        if self.kind == "audio":
+            return self.family.forward(self.cfg, params, batch["tokens"],
+                                       batch["frames"])
+        if self.kind == "vlm":
+            return self.family.forward(self.cfg, params, batch["tokens"],
+                                       vision_embeds=batch["vision"])
+        return self.family.forward(self.cfg, params, batch["tokens"])
+
+    def init_cache(self, batch: int, max_len: int, kv_dtype=None):
+        return self.family.init_cache(self.cfg, batch, max_len,
+                                      kv_dtype=kv_dtype)
+
+    def prefill(self, params, tokens, cache, batch_extras=None):
+        if self.kind == "audio":
+            return self.family.prefill(self.cfg, params, tokens, cache,
+                                       (batch_extras or {})["frames"])
+        if self.kind == "vlm":
+            return self.family.prefill(
+                self.cfg, params, tokens, cache,
+                vision_embeds=(batch_extras or {}).get("vision"))
+        return self.family.prefill(self.cfg, params, tokens, cache)
+
+    def decode_step(self, params, tokens, cache):
+        return self.family.decode_step(self.cfg, params, tokens, cache)
+
+    def min_hbm_bytes(self, shape_name: str) -> int:
+        """Theoretical HBM traffic floor for one step of this shape.
+
+        train:   params read fwd+bwd + grads w+r + Adam mu/nu r+w (f32) +
+                 layer-boundary activations w+r (bf16)
+        decode:  full params read once + KV cache read (+ small writes)
+        prefill: params read + activations written + cache written
+        """
+        sh = SHAPES[shape_name]
+        S, B = sh["seq_len"], sh["global_batch"]
+        kind = sh["kind"]
+        n = self.param_count()
+        n_active = self.active_param_count()
+        D = self.cfg.d_model
+        L = getattr(self.cfg, "n_layers", 1)
+        if kind == "train":
+            act = 2 * 2 * L * B * S * D           # save+read, bf16
+            return int(3 * 2 * n + (4 + 16) * n + 2 * n_active * 0 + act)
+        # serving floors
+        cache = jax.eval_shape(functools.partial(self.init_cache, B, S))
+        cache_bytes = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(cache))
+        if kind == "decode":
+            return int(2 * n + cache_bytes)
+        act = 2 * B * S * D * L
+        return int(2 * n + cache_bytes + act)
+
+    # -- shapes ----------------------------------------------------------------
+    def supports(self, shape_name: str) -> tuple[bool, str]:
+        if shape_name == "long_500k" and not self.sub_quadratic:
+            return False, ("full quadratic attention: 512k decode cache "
+                           "infeasible; run on SSM/hybrid archs only "
+                           "(see DESIGN.md §Arch-applicability)")
+        return True, ""
+
+    def step_kind(self, shape_name: str) -> str:
+        return SHAPES[shape_name]["kind"]
+
+    def input_specs(self, shape_name: str) -> dict:
+        """ShapeDtypeStruct stand-ins for every input of the step function."""
+        sh = SHAPES[shape_name]
+        S, B = sh["seq_len"], sh["global_batch"]
+        kind = sh["kind"]
+        i32 = jnp.int32
+        D = self.cfg.d_model
+
+        if kind == "train":
+            if self.kind == "vlm":
+                P = self.cfg.vision_tokens
+                return {
+                    "tokens": jax.ShapeDtypeStruct((B, S - P), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S - P), i32),
+                    "vision": jax.ShapeDtypeStruct((B, P, D), self.cfg.dtype),
+                }
+            if self.kind == "audio":
+                return {
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32),
+                    "frames": jax.ShapeDtypeStruct(
+                        (B, self.cfg.n_audio_ctx, D), self.cfg.dtype),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+
+        if kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if self.kind == "vlm":
+                P = self.cfg.vision_tokens
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+                specs["vision"] = jax.ShapeDtypeStruct((B, P, D),
+                                                       self.cfg.dtype)
+            if self.kind == "audio":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, self.cfg.n_audio_ctx, D), self.cfg.dtype)
+            specs["cache"] = jax.eval_shape(
+                functools.partial(self.init_cache, B, S))
+            return specs
+
+        # decode: one token against a cache of S
+        kv_dt = self.kv_dtype_decode if shape_name == "decode_32k" else None
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": jax.eval_shape(
+                functools.partial(self.init_cache, B, S, kv_dtype=kv_dt)),
+        }
+        return specs

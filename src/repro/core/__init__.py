@@ -1,0 +1,49 @@
+# The paper's primary contribution: the VectorMesh scheduling methodology as a
+# composable library — NDRange tensor-op formulation (Eq. 1-3), bandwidth-
+# minimizing output-stationary tiling (Eq. 4), FIFO-mesh data-exchange analysis
+# (Fig. 2), and the BFN conflict-free access condition (§II-C) — plus the
+# bridge that turns schedules into Pallas BlockSpecs / grid orders on TPU.
+from .ndrange import (
+    AffineExpr,
+    Dim,
+    OperandView,
+    TensorOp,
+    PARALLEL,
+    TEMPORAL,
+    attention_scores_op,
+    conv2d_op,
+    correlation_op,
+    depthwise_conv2d_op,
+    matmul_op,
+)
+from .tiling import (
+    BufferSpec,
+    TEU_BUFFER,
+    VMEM_BUFFER,
+    TileSchedule,
+    TrafficReport,
+    schedule_for,
+    search_tiles,
+    tile_fits,
+    traffic,
+)
+from .exchange import (
+    ExchangePlan,
+    GridOrder,
+    grid_fetch_bytes,
+    order_grid_for_sharing,
+    plan_mesh_exchange,
+)
+from . import bfn
+from .pallas_bridge import KernelPlan, matmul_block_shapes, plan_kernel
+
+__all__ = [
+    "AffineExpr", "Dim", "OperandView", "TensorOp", "PARALLEL", "TEMPORAL",
+    "attention_scores_op", "conv2d_op", "correlation_op",
+    "depthwise_conv2d_op", "matmul_op",
+    "BufferSpec", "TEU_BUFFER", "VMEM_BUFFER", "TileSchedule",
+    "TrafficReport", "schedule_for", "search_tiles", "tile_fits", "traffic",
+    "ExchangePlan", "GridOrder", "grid_fetch_bytes", "order_grid_for_sharing",
+    "plan_mesh_exchange",
+    "bfn", "KernelPlan", "matmul_block_shapes", "plan_kernel",
+]

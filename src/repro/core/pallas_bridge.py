@@ -1,0 +1,90 @@
+"""Bridge: VectorMesh tile schedules -> Pallas BlockSpecs (TPU adaptation).
+
+The paper's TEU schedule becomes one Pallas grid step: operand tiles live in
+VMEM, the PSum buffer is an f32 VMEM accumulator, and the BFN conflict-free
+condition becomes (sublane, lane) = (8, 128) alignment of the block shapes.
+The grid order comes from ``core.exchange.order_grid_for_sharing`` so blocks
+invariant along the innermost grid dims stay VMEM-resident (the intra-chip
+FIFO analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+from .ndrange import TensorOp
+from .tiling import BufferSpec, TileSchedule, search_tiles
+from .exchange import order_grid_for_sharing, GridOrder
+
+# TPU tiling quanta for the last two axes of a VMEM block (fp32/bf16).
+SUBLANE = 8
+LANE = 128
+MXU = 128
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def aligned(x: int, m: int) -> bool:
+    return x % m == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Everything a Pallas kernel needs: block shapes, grid, order."""
+
+    schedule: TileSchedule
+    grid_order: GridOrder
+    block: dict[str, int]          # tile sizes, TPU-aligned
+    grid: tuple[int, ...]          # grid extents in grid_order
+    dims_order: tuple[str, ...]
+
+    @property
+    def vmem_bytes(self) -> int:
+        return self.schedule.input_bytes + self.schedule.psum_bytes
+
+
+def plan_kernel(op: TensorOp, *, vmem_budget_bytes: int = 64 * 1024 * 1024,
+                psum_budget_bytes: int = 32 * 1024 * 1024,
+                align: Mapping[str, int] | None = None,
+                caps: Mapping[str, int] | None = None) -> KernelPlan:
+    """Run the paper's tile search with TPU constraints and order the grid.
+
+    ``align`` maps NDRange dim name -> required multiple (e.g. the two matmul
+    lanes -> 128 for the MXU). Dims equal to their full size are exempt
+    (ragged final blocks are handled by masking in the kernels).
+    """
+    buf = BufferSpec(input_bytes=vmem_budget_bytes,
+                     psum_bytes=psum_budget_bytes,
+                     align=dict(align or {}),
+                     lanes=MXU * MXU)
+    sched = search_tiles(op, buf, caps=caps)
+    order = order_grid_for_sharing(op, sched.tile)
+    grid_shape = op.grid_shape(sched.tile)
+    grid = tuple(grid_shape[name] for name in order.order)
+    return KernelPlan(schedule=sched, grid_order=order, block=dict(sched.tile),
+                      grid=grid, dims_order=order.order)
+
+
+def matmul_block_shapes(M: int, N: int, K: int,
+                        *, vmem_budget_bytes: int = 8 * 1024 * 1024
+                        ) -> tuple[int, int, int]:
+    """Convenience: (bm, bn, bk) for an MxK @ KxN matmul, MXU-aligned.
+
+    Uses the paper objective ((bm+bn)*bk bytes per bm*bn*bk MACs) under the
+    VMEM budget; clamps to the problem size and rounds to MXU quanta.
+    """
+    from .ndrange import matmul_op
+    op = matmul_op(M, N, K)
+    plan = plan_kernel(
+        op,
+        vmem_budget_bytes=vmem_budget_bytes,
+        psum_budget_bytes=vmem_budget_bytes // 2,
+        align={"i": MXU if M >= MXU else 1,
+               "j": LANE if N >= LANE else 1,
+               "k": LANE if K >= LANE else 1},
+    )
+    b = plan.block
+    return b["i"], b["j"], b["k"]

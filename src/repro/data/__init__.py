@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, SyntheticLM, ShardedLoader, Prefetcher,
+                       make_train_iterator)
+
+__all__ = ["DataConfig", "SyntheticLM", "ShardedLoader", "Prefetcher",
+           "make_train_iterator"]

@@ -1,0 +1,11 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes:
+# the TEU tile executor as (1) output-stationary matmul, (2) direct conv2d
+# (Eq. 2 incl. stride/dilation), (3) spatial-matching correlation (Eq. 3),
+# and (4) flash attention (QK^T = Eq. 3 at LM scale) for prefill + decode.
+# ops.py = jit'd wrappers (block shapes from the paper's tile search);
+# ref.py = pure-jnp oracles for allclose validation (interpret mode on CPU).
+from . import ops, ref
+from .ops import (conv2d, correlation, flash_attention, flash_decode, matmul)
+
+__all__ = ["ops", "ref", "conv2d", "correlation", "flash_attention",
+           "flash_decode", "matmul"]

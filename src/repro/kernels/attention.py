@@ -1,0 +1,182 @@
+"""Flash attention Pallas kernels (prefill + decode) with GQA / windowing.
+
+Attention IS the paper's spatial-matching workload at LM scale: QK^T is
+Eq. (3) with the search window = the causal (or sliding) window, and the
+online-softmax accumulator is the PSum buffer held stationary while the
+temporal index (the kv block) streams — the same output-stationary schedule
+``core.tiling`` derives for Eq. (4). GQA enters through the K/V index maps:
+the q-head grid axis has zero partial derivative against the kv head beyond
+its group, so K/V blocks are SHARED across the q-heads of a group exactly
+like Fig. 2 shares E between P and Q.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # avoid nan from (-inf) - (-inf)
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+               scale: float, causal: bool, window: int | None,
+               block_q: int, block_k: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (block_q, d)
+    k = k_ref[0]                       # (block_k, d)
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    iq = pl.program_id(1)
+    qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _drain():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, window: int | None = None,
+                           block_q: int = 128, block_k: int = 128,
+                           scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (BH, Sq, D); k, v: (BH_kv, Sk, D) with BH % BH_kv == 0 (GQA groups
+    must be laid out so head h of q uses kv head h // (BH // BH_kv))."""
+    BH, Sq, Dh = q.shape
+    BHkv, Sk, _ = k.shape
+    assert BH % BHkv == 0, (BH, BHkv)
+    group = BH // BHkv
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    grid = (BH, Sq // block_q, Sk // block_k)
+
+    kern = functools.partial(_fa_kernel, scale=scale, causal=causal,
+                             window=window, block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dh), lambda h, iq, ik: (h, iq, 0)),
+            # K/V shared across the q-heads of a GQA group (zero derivative
+            # of the kv index against the intra-group head axis).
+            pl.BlockSpec((1, block_k, Dh),
+                         lambda h, iq, ik: (h // group, ik, 0)),
+            pl.BlockSpec((1, block_k, Dh),
+                         lambda h, iq, ik: (h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dh), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode: one new token against a KV cache (the decode_* / long_* shapes).
+# ---------------------------------------------------------------------------
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_k: int):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                       # (nq, d) — the group's q heads
+    k = k_ref[0]                       # (block_k, d)
+    s = jax.lax.dot_general(
+        q, k, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale   # (nq, block_k)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[0], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(1) - 1)
+    def _drain():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                        lengths: jax.Array, *, block_k: int = 512,
+                        scale: float | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B*Hkv, group, D) one token per sequence, grouped by kv head;
+    k_cache/v_cache: (B*Hkv, S, D); lengths: (B*Hkv,) valid cache lengths.
+    Returns (B*Hkv, group, D)."""
+    BH, G, Dh = q.shape
+    BH2, S, _ = k_cache.shape
+    assert BH == BH2 and S % block_k == 0, (q.shape, k_cache.shape, block_k)
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    grid = (BH, S // block_k)
+    kern = functools.partial(_decode_kernel, scale=scale, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, Dh), lambda h, ik: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, Dh), lambda h, ik: (h, ik, 0)),
+            pl.BlockSpec((1, block_k, Dh), lambda h, ik: (h, ik, 0)),
+            pl.BlockSpec((1,), lambda h, ik: (h,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, Dh), lambda h, ik: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, Dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths)

@@ -1,0 +1,54 @@
+"""Spatial-matching / correlation Pallas kernel (paper Eq. 3, FlowNet [16]).
+
+    C(dy, dx, y, x) = sum_c I1(c, y, x) * I2(c, y + dy, x + dx)
+
+Layout here is channels-last: I1 (H, W, C), I2 pre-padded to
+(H + 2R, W + 2R, C) by ops.py, output (H, W, D, D) with D = 2R + 1
+(displacements enumerated in the last two axes, FlowNet cost-volume style).
+
+The TEU tile is a block of `y` rows x all x x all channels; both displacement
+axes are grid dims whose I1 index map is INVARIANT (zero partial derivative,
+paper Fig. 2), so the I1 block is fetched once and shared across all (dy, dx)
+tiles — the data-exchange mesh again. I2's halo block is Element-indexed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _corr_kernel(i1_ref, i2_ref, o_ref):
+    # i1_ref: (by, W, C); i2_ref: (by, W, C) — the window shifted by (dy, dx)
+    # o_ref: (by, W, 1, 1)
+    prod = i1_ref[...].astype(jnp.float32) * i2_ref[...].astype(jnp.float32)
+    o_ref[...] = prod.sum(axis=-1)[..., None, None].astype(o_ref.dtype)
+
+
+def correlation_pallas(i1: jax.Array, i2_padded: jax.Array, *, radius: int,
+                       block_y: int = 8, interpret: bool = False) -> jax.Array:
+    """i1: (H, W, C); i2_padded: (H+2R, W+2R, C) -> (H, W, D, D), D = 2R+1."""
+    H, W, C = i1.shape
+    D = 2 * radius + 1
+    assert i2_padded.shape == (H + 2 * radius, W + 2 * radius, C)
+    assert H % block_y == 0, (H, block_y)
+    grid = (H // block_y, D, D)
+
+    return pl.pallas_call(
+        _corr_kernel,
+        grid=grid,
+        in_specs=[
+            # I1 invariant to (dy, dx): fetched once per y-block, shared
+            # across all D*D displacement steps (FIFO-mesh analogue).
+            pl.BlockSpec((block_y, W, C), lambda y, dy, dx: (y, 0, 0)),
+            # I2 window at displacement (dy, dx) — element-indexed halo.
+            pl.BlockSpec((pl.Element(block_y), pl.Element(W), C),
+                         lambda y, dy, dx: (y * block_y + dy, dx, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_y, W, 1, 1),
+                               lambda y, dy, dx: (y, 0, dy, dx)),
+        out_shape=jax.ShapeDtypeStruct((H, W, D, D), i1.dtype),
+        interpret=interpret,
+    )(i1, i2_padded)

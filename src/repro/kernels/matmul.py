@@ -1,0 +1,65 @@
+"""VectorMesh-tiled matmul Pallas kernel (the TEU, §II-B/C, on the MXU).
+
+Output-stationary: the f32 accumulator (the "PSum buffer") stays in VMEM
+while the temporal index k streams through it — grid order (i, j, k) with k
+innermost, exactly the schedule ``core.exchange.order_grid_for_sharing``
+produces for Eq. (1). Block shapes come from the paper's bandwidth-
+minimizing tile search (``core.pallas_bridge.plan_kernel``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref):
+    # k == 0: reset the PSum buffer (paper: PSums stay static in the TEU).
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    # last k: drain the PSum exactly once (optimal output bandwidth, §II-B).
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, *, block_m: int, block_n: int,
+                  block_k: int, out_dtype=None,
+                  interpret: bool = False) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N); dims must be multiples of the blocks."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0, (
+        (M, N, K), (block_m, block_n, block_k))
+    out_dtype = out_dtype or a.dtype
+    grid = (M // block_m, N // block_n, K // block_k)
+
+    try:
+        params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except TypeError:  # pragma: no cover - older jax naming
+        params = None
+
+    kwargs = dict(compiler_params=params) if params is not None else {}
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(a, b)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or a.dtype
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(out_dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1,
+               dilation: int = 1) -> jax.Array:
+    """x: (N, IH, IW, CI), w: (KH, KW, CI, CO) -> NHWC, VALID padding."""
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        rhs_dilation=(dilation, dilation),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out.astype(x.dtype)
+
+
+def correlation_ref(i1: jax.Array, i2: jax.Array, *, radius: int) -> jax.Array:
+    """i1, i2: (H, W, C) -> (H, W, D, D) cost volume, D = 2*radius+1."""
+    H, W, C = i1.shape
+    D = 2 * radius + 1
+    i2p = jnp.pad(i2, ((radius, radius), (radius, radius), (0, 0)))
+    rows = []
+    for dy in range(D):
+        cols = []
+        for dx in range(D):
+            win = jax.lax.dynamic_slice(i2p, (dy, dx, 0), (H, W, C))
+            cols.append((i1.astype(jnp.float32) *
+                         win.astype(jnp.float32)).sum(-1))
+        rows.append(jnp.stack(cols, axis=-1))
+    return jnp.stack(rows, axis=-2).astype(i1.dtype)  # (H, W, D(dy), D(dx))
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None) -> jax.Array:
+    """q: (BH, Sq, D), k/v: (BHkv, Sk, D); GQA by head grouping."""
+    BH, Sq, Dh = q.shape
+    BHkv, Sk, _ = k.shape
+    group = BH // BHkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+               lengths: jax.Array, *, scale: float | None = None) -> jax.Array:
+    """q: (BHkv, G, D); caches (BHkv, S, D); lengths (BHkv,) -> (BHkv, G, D)."""
+    BH, G, Dh = q.shape
+    S = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    s = jnp.einsum("hgd,hsd->hgs", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("hgs,hsd->hgd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,175 @@
+"""In-sharding construction for every step function (dry-run + launchers).
+
+Rules (DESIGN.md §6): batch on the data axes (pod+data), features on
+`model`, vocab on `model` (configs pad vocab to a multiple of 256), caches
+batch-on-data + (kv-heads | head-dim | seq) on `model` by divisibility, and
+the long-context batch=1 shapes shard the SEQUENCE on data (SP).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import param_specs
+
+
+def data_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _dsize(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _msize(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def batch_spec_tree(specs: dict, mesh: Mesh, *, long: bool) -> dict:
+    """Shardings for the input batch dict (tokens/labels/vision/frames)."""
+    d = data_axes(mesh)
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            continue
+        if long:
+            # batch=1: replicate tokens (1,1); shard long seq dims on data
+            spec = [None] * v.ndim
+            for i, s in enumerate(v.shape[1:], start=1):
+                if s % _dsize(mesh) == 0 and s > 1:
+                    spec[i] = d
+                    break
+            out[k] = P(*spec)
+        else:
+            spec = [None] * v.ndim
+            if v.shape[0] % _dsize(mesh) == 0:
+                spec[0] = d
+            out[k] = P(*spec)
+    return out
+
+
+def cache_spec_tree(cache_shapes: Any, mesh: Mesh, *, long: bool) -> Any:
+    """Shardings for a cache pytree, keyed by leaf name + divisibility."""
+    d = data_axes(mesh)
+    ms = _msize(mesh)
+    ds = _dsize(mesh)
+
+    def leaf_spec(path, leaf):
+        key = getattr(path[-1], "key", str(path[-1]))
+        shape = leaf.shape
+        nd = len(shape)
+        if key == "length":
+            return P(d) if shape[0] % ds == 0 else P(None)
+        spec = [None] * nd
+        if key in ("k", "v", "xk", "xv"):
+            # (L|G, B, S, Kv, Dh)
+            if not long and shape[1] % ds == 0:
+                spec[1] = d
+            if long and shape[2] % ds == 0:
+                spec[2] = d          # SP: shard cache sequence
+            if shape[3] % ms == 0:
+                spec[3] = "model"    # kv heads
+            elif shape[4] % ms == 0:
+                spec[4] = "model"    # head dim
+            elif not long and shape[2] % ms == 0:
+                spec[2] = "model"    # cache sequence on model
+            return P(*spec)
+        if key in ("k_scale", "v_scale"):
+            # (L, B, S, Kv)
+            if not long and shape[1] % ds == 0:
+                spec[1] = d
+            if long and shape[2] % ds == 0:
+                spec[2] = d
+            if shape[3] % ms == 0:
+                spec[3] = "model"
+            elif not long and shape[2] % ms == 0:
+                spec[2] = "model"
+            return P(*spec)
+        if key in ("conv", "ssm"):
+            # mamba: (L, B, w, dxbc) / (L, B, H, Pd, N)
+            if shape[1] % ds == 0:
+                spec[1] = d
+            if shape[-1] % ms == 0 and key == "conv":
+                spec[-1] = "model"
+            if key == "ssm" and shape[2] % ms == 0:
+                spec[2] = "model"
+            return P(*spec)
+        if key in ("conv_g", "lru_g", "conv_t", "lru_t"):
+            # rg: (G, 2, B, w, W) / (G, 2, B, W) / (Tr, B, w, W) / (Tr, B, W)
+            bidx = 2 if key.endswith("_g") else 1
+            if shape[bidx] % ds == 0:
+                spec[bidx] = d
+            if shape[-1] % ms == 0:
+                spec[-1] = "model"
+            return P(*spec)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shapes)
+
+
+def step_in_shardings(bundle, shape_name: str, mesh: Mesh):
+    """(abstract_args, in_shardings, step_fn, donate) for one cell."""
+    from repro.training import TrainHyper, make_train_step
+    from repro.optim import adamw_init
+
+    kind = bundle.step_kind(shape_name)
+    long = shape_name == "long_500k"
+    specs = bundle.input_specs(shape_name)
+    aparams = bundle.abstract_params()
+    pspecs = param_specs(bundle.kind, aparams, mesh)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                       is_leaf=lambda x: isinstance(x, P))
+
+    if kind == "train":
+        hyper = TrainHyper()
+        step = make_train_step(bundle.forward, hyper)
+        aopt = jax.eval_shape(adamw_init, aparams)
+        opt_sh = {
+            "mu": psh, "nu": jax.tree.map(lambda x: x, psh),
+            "step": NamedSharding(mesh, P()),
+        }
+        bspec = batch_spec_tree(specs, mesh, long=long)
+        bsh = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
+        args = (aparams, aopt, specs)
+        shardings = (psh, opt_sh, bsh)
+        return args, shardings, step, (0, 1)   # donate params + opt state
+
+    if kind == "prefill":
+        cache_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s),
+            cache_spec_tree(specs["cache"], mesh, long=long),
+            is_leaf=lambda x: isinstance(x, P))
+        bspec = batch_spec_tree(specs, mesh, long=long)
+
+        extras_keys = [k for k in specs if k not in ("tokens", "cache")]
+
+        def step(params, tokens, cache, extras):
+            return bundle.prefill(params, tokens, cache, extras)
+
+        args = (aparams, specs["tokens"], specs["cache"],
+                {k: specs[k] for k in extras_keys})
+        shardings = (psh, NamedSharding(mesh, bspec["tokens"]), cache_sh,
+                     {k: NamedSharding(mesh, bspec[k]) for k in extras_keys})
+        return args, shardings, step, (2,)      # donate the cache
+
+    # decode
+    cache_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        cache_spec_tree(specs["cache"], mesh, long=long),
+        is_leaf=lambda x: isinstance(x, P))
+    bspec = batch_spec_tree(specs, mesh, long=long)
+
+    def step(params, tokens, cache):
+        return bundle.decode_step(params, tokens, cache)
+
+    args = (aparams, specs["tokens"], specs["cache"])
+    shardings = (psh, NamedSharding(mesh, bspec["tokens"]), cache_sh)
+    return args, shardings, step, (2,)          # donate the cache

@@ -1,0 +1,10 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_schedule)
+from .compression import (compress_int8, decompress_int8,
+                          ef_compressed_psum, init_error_feedback)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "clip_by_global_norm",
+    "cosine_schedule", "compress_int8", "decompress_int8",
+    "ef_compressed_psum", "init_error_feedback",
+]

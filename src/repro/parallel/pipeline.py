@@ -1,0 +1,80 @@
+"""Pipeline parallelism over the `pod` axis (GPipe microbatching).
+
+When multi-pod training is layer-bound rather than data-bound, the `pod`
+axis can carry pipeline STAGES instead of outer data parallelism: the layer
+stack is split into `n_pods` contiguous stages, microbatches stream through,
+and activations hop stage-to-stage with ``jax.lax.ppermute`` — one more
+incarnation of the paper's neighbour-FIFO exchange (stage handoff = FIFO).
+
+This implementation runs inside shard_map over the `pod` axis. Each pod
+holds only its stage's parameters (1/n_pods of the stack). The classic GPipe
+schedule executes `n_micro + n_stages - 1` ticks; bubble fraction
+(n_stages-1)/(n_micro + n_stages - 1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                     stage_params: Any, x_micro: jax.Array, mesh: Mesh,
+                     axis: str = "pod") -> jax.Array:
+    """Run microbatches through pipeline stages laid along `axis`.
+
+    stage_fn(params_for_stage, x) -> x  — one stage's computation.
+    stage_params: pytree whose leaves have a leading `n_stages` dim, sharded
+        on `axis` (each pod holds its own stage slice).
+    x_micro: (n_micro, mb, ...) microbatched input, replicated over `axis`.
+
+    Returns (n_micro, mb, ...) outputs (valid on the LAST stage; other pods
+    hold intermediate activations — callers psum/select as needed).
+    """
+
+    def body(params, xs):
+        # params: this stage's slice (leading dim 1) ; xs: (n_micro, mb, ...)
+        params = jax.tree.map(lambda a: a[0], params)
+        n_stages = jax.lax.psum(1, axis)
+        stage = jax.lax.axis_index(axis)
+        n_micro = xs.shape[0]
+        ticks = n_micro + n_stages - 1
+        fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(t, carry):
+            inflight, outs = carry
+            # which microbatch enters stage 0 this tick
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            feed = jax.lax.dynamic_index_in_dim(xs, mb_idx, 0, keepdims=False)
+            # stage 0 consumes fresh input; others consume the handoff
+            x_in = jnp.where(stage == 0, feed, inflight)
+            y = stage_fn(params, x_in)
+            # last stage emits a finished microbatch at tick t - (S-1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            valid = (t >= n_stages - 1) & (stage == n_stages - 1)
+            outs = jax.lax.cond(
+                valid,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y.astype(o.dtype), out_idx, 0),
+                lambda o: o,
+                outs)
+            # FIFO hop to the next stage
+            inflight = jax.lax.ppermute(y, axis, fwd_perm)
+            return (inflight, outs)
+
+        inflight0 = jax.lax.pcast(jnp.zeros_like(xs[0]), (axis,),
+                                  to="varying")
+        outs0 = jax.lax.pcast(jnp.zeros(xs.shape, xs.dtype), (axis,),
+                              to="varying")
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (inflight0, outs0))
+        # only the last stage ever wrote into `outs`; psum replicates it.
+        return jax.lax.psum(outs, axis)
+
+    spec_p = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(spec_p, P()),
+                       out_specs=P())
+    return fn(stage_params, x_micro)

@@ -1,0 +1,5 @@
+from .fault import (ElasticPlan, HeartbeatMonitor, HostState, StragglerPolicy,
+                    plan_elastic_remesh)
+
+__all__ = ["ElasticPlan", "HeartbeatMonitor", "HostState", "StragglerPolicy",
+           "plan_elastic_remesh"]

@@ -1,0 +1,117 @@
+"""Batched serving engine: slot-based continuous batching.
+
+A fixed pool of `batch` slots; requests occupy a slot, prefill fills its
+cache region, decode steps run for the WHOLE pool every tick (SPMD-friendly:
+one jitted decode_step regardless of occupancy), finished slots are recycled
+for queued requests. Greedy sampling (temperature hook provided).
+
+Caches and decode_step shardings follow repro.parallel.sharding — the
+engine itself is host-side control logic and is exercised on CPU in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch: int              # slot pool size
+    max_len: int
+    max_new_tokens: int = 32
+    eos_id: int = -1        # -1: never stop early
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int | None = None
+    generated: list[int] = dataclasses.field(default_factory=list)
+    remaining: int = 0
+
+
+class ServingEngine:
+    """bundle must provide: init_cache(batch, max_len), prefill(params,
+    tokens, cache, **extras), decode_step(params, tokens, cache)."""
+
+    def __init__(self, bundle: Any, params: Any, cfg: ServeConfig):
+        self.bundle = bundle
+        self.params = params
+        self.cfg = cfg
+        self.slots = [_Slot() for _ in range(cfg.batch)]
+        self.queue: list[tuple[int, np.ndarray]] = []
+        self.results: dict[int, list[int]] = {}
+        self._next_id = 0
+        self._decode = jax.jit(bundle.decode_step)
+
+    def submit(self, prompt_tokens: np.ndarray) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, prompt_tokens))
+        return rid
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.request_id is None]
+
+    def _admit(self, cache):
+        """Prefill queued requests into free slots (one batch prefill for
+        simplicity: slots prefill independently via per-slot batch=1)."""
+        for slot_idx in self._free_slots():
+            if not self.queue:
+                break
+            rid, prompt = self.queue.pop(0)
+            toks = jnp.asarray(prompt, jnp.int32)[None]
+            c1 = self.bundle.init_cache(1, self.cfg.max_len)
+            logits, c1 = self.bundle.prefill(self.params, toks, c1)
+            nxt = int(jnp.argmax(logits[0, -1]))
+            cache = self._write_slot(cache, c1, slot_idx)
+            s = self.slots[slot_idx]
+            s.request_id = rid
+            s.generated = [nxt]
+            s.remaining = self.cfg.max_new_tokens - 1
+        return cache
+
+    @staticmethod
+    def _write_slot(cache, one, idx):
+        """Copy a batch=1 cache into slot `idx` of the pooled cache."""
+        out = {}
+        for k, v in cache.items():
+            s = one[k]
+            if k == "length":
+                out[k] = v.at[idx].set(s[0])
+            else:
+                # pooled (L, B, ...) <- single (L, 1, ...)
+                out[k] = jax.lax.dynamic_update_slice(
+                    v, s.astype(v.dtype),
+                    (0, idx) + (0,) * (v.ndim - 2))
+        return out
+
+    def run(self, cache=None) -> dict[int, list[int]]:
+        """Drain queue + all slots to completion; returns {rid: tokens}."""
+        cfg = self.cfg
+        if cache is None:
+            cache = self.bundle.init_cache(cfg.batch, cfg.max_len)
+        while self.queue or any(s.request_id is not None for s in self.slots):
+            cache = self._admit(cache)
+            # one decode tick for the whole pool
+            last = np.zeros((cfg.batch, 1), np.int32)
+            for i, s in enumerate(self.slots):
+                if s.request_id is not None:
+                    last[i, 0] = s.generated[-1]
+            logits, cache = self._decode(self.params, jnp.asarray(last),
+                                         cache)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for i, s in enumerate(self.slots):
+                if s.request_id is None:
+                    continue
+                tok = int(nxt[i])
+                s.generated.append(tok)
+                s.remaining -= 1
+                if s.remaining <= 0 or tok == cfg.eos_id:
+                    self.results[s.request_id] = s.generated
+                    self.slots[i] = _Slot()
+        return self.results

@@ -1,0 +1,15 @@
+"""Faithful reproduction of the paper's evaluation: cycle-approximate models
+of VectorMesh / TPU / Eyeriss on the paper's workloads (Table I + modern +
+spatial matching), producing Table III traffic numbers and Fig. 3/4
+rooflines from the same core scheduling machinery the TPU kernels use."""
+from . import archs, simulator, workloads
+from .archs import ArchConfig, eyeriss, tpu, vectormesh
+from .simulator import SimResult, roofline_gmacs, simulate, summarize
+from .workloads import ALL, CLASSIC, GEMM, MODERN, SPATIAL, Workload, by_name
+
+__all__ = [
+    "archs", "simulator", "workloads",
+    "ArchConfig", "eyeriss", "tpu", "vectormesh",
+    "SimResult", "roofline_gmacs", "simulate", "summarize",
+    "ALL", "CLASSIC", "GEMM", "MODERN", "SPATIAL", "Workload", "by_name",
+]

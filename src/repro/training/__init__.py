@@ -1,0 +1,3 @@
+from .step import TrainHyper, make_train_step, loss_fn
+
+__all__ = ["TrainHyper", "make_train_step", "loss_fn"]

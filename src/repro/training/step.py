@@ -1,0 +1,96 @@
+"""Training step factory: loss, remat, microbatch accumulation, AdamW.
+
+The returned ``train_step(params, opt_state, batch) -> (params, opt_state,
+metrics)`` is a single jit-able function; the launcher wraps it in jax.jit
+with in/out shardings from repro.parallel.sharding. Microbatching runs a
+lax.scan over grad accumulation so the global batch is decoupled from
+per-device activation memory; remat uses the dots-saveable policy (recompute
+everything except matmul outputs — the standard memory/compute trade at
+scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamWConfig, adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHyper:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    remat: bool = False  # models remat per-layer internally
+    aux_weight: float = 0.01      # MoE load-balance loss weight
+    z_weight: float = 1e-4        # z-loss for logit stability
+
+
+def loss_fn(forward: Callable, params: Any, batch: dict) -> tuple:
+    """Next-token CE + MoE aux + z-loss. forward(params, batch)->(logits,aux).
+
+    The label logit is extracted with a masked SUM over the vocab axis (not
+    take_along_axis/gather): the mask is elementwise over the vocab-sharded
+    logits, so GSPMD never all-gathers the vocab dimension — gather would
+    replicate (B, S, V) f32 on every chip.
+    """
+    logits, aux = forward(params, batch)
+    labels = batch["labels"]
+    T = labels.shape[1]
+    logits = logits[:, -T:].astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    at_label = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    ce = (logz - at_label).mean()
+    zloss = (logz ** 2).mean()
+    return ce + 0.01 * aux + 1e-4 * zloss, (ce, aux)
+
+
+def make_train_step(forward: Callable, hyper: TrainHyper) -> Callable:
+    """forward(params, batch) -> (logits, aux)."""
+
+    flc = functools.partial(loss_fn, forward)
+    if hyper.remat:
+        flc = jax.checkpoint(
+            flc, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    grad_fn = jax.value_and_grad(flc, has_aux=True)
+
+    def compute_grads(params, batch):
+        if hyper.microbatches == 1:
+            (loss, (ce, aux)), grads = grad_fn(params, batch)
+            return loss, ce, aux, grads
+
+        mb = hyper.microbatches
+
+        def resplit(x):
+            b = x.shape[0]
+            assert b % mb == 0, (b, mb)
+            return x.reshape(mb, b // mb, *x.shape[1:])
+
+        micro = jax.tree.map(resplit, batch)
+
+        def acc_step(carry, mbatch):
+            loss_a, ce_a, aux_a, g_a = carry
+            (loss, (ce, aux)), g = grad_fn(params, mbatch)
+            g_a = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_a, g)
+            return (loss_a + loss, ce_a + ce, aux_a + aux, g_a), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, ce, aux, grads), _ = jax.lax.scan(
+            acc_step, (0.0, 0.0, 0.0, g0), micro)
+        inv = 1.0 / mb
+        return loss * inv, ce * inv, aux * inv, jax.tree.map(
+            lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, ce, aux, grads = compute_grads(params, batch)
+        params, opt_state, om = adamw_update(hyper.optimizer, params, grads,
+                                             opt_state)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        return params, opt_state, metrics
+
+    return train_step

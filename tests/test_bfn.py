@@ -1,0 +1,52 @@
+"""Butterfly-network conflict-free condition (paper §II-C) — property tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bfn
+
+X = 5  # 32 banks / PEs, as in the paper
+
+
+odd = st.integers(min_value=-31, max_value=31).filter(lambda v: v % 2 == 1)
+
+
+@given(base=st.integers(0, 4096), coeffs=st.lists(odd, min_size=X, max_size=X))
+@settings(max_examples=200, deadline=None)
+def test_merit_patterns_served_in_one_cycle(base, coeffs):
+    """The MERIT address form is ALWAYS conflict-free + butterfly-routable."""
+    addrs = bfn.merit_addresses(base, coeffs, X)
+    assert bfn.serves_in_one_cycle(addrs, X)
+
+
+@given(base=st.integers(0, 4096), stride=st.integers(1, 255))
+@settings(max_examples=200, deadline=None)
+def test_odd_strides_ok_even_strides_conflict(base, stride):
+    addrs = bfn.strided_addresses(base, stride, X)
+    if stride % 2 == 1:
+        assert bfn.serves_in_one_cycle(addrs, X)
+    else:
+        assert not bfn.is_conflict_free(addrs, X)
+
+
+@given(base=st.integers(0, 4096), stride=st.integers(2, 254))
+@settings(max_examples=100, deadline=None)
+def test_padding_fix(base, stride):
+    """The paper's padding technique: bump even strides to odd."""
+    padded = bfn.pad_stride(stride)
+    assert padded % 2 == 1
+    assert bfn.serves_in_one_cycle(
+        bfn.strided_addresses(base, padded, X), X)
+
+
+def test_even_coefficient_rejected():
+    import pytest
+    with pytest.raises(ValueError):
+        bfn.merit_addresses(0, [2, 1, 1, 1, 1], X)
+
+
+@given(key=st.integers(0, 31), base=st.integers(0, 1024),
+       stride=st.integers(1, 63).filter(lambda v: v % 2 == 1))
+@settings(max_examples=100, deadline=None)
+def test_xor_shuffle_preserves_conflict_freedom(key, base, stride):
+    addrs = bfn.strided_addresses(base, stride, X)
+    shuffled = bfn.xor_shuffle(addrs, key, X)
+    assert bfn.is_conflict_free(shuffled, X)

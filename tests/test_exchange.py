@@ -1,0 +1,57 @@
+"""Data-exchange mesh analysis (paper Fig. 2) + Pallas grid ordering."""
+import itertools
+import math
+
+from repro.core import (conv2d_op, grid_fetch_bytes, matmul_op,
+                        order_grid_for_sharing, plan_mesh_exchange,
+                        search_tiles, TEU_BUFFER)
+
+
+def test_mesh_exchange_shares_invariant_operands():
+    op = matmul_op(256, 256, 256)
+    s = search_tiles(op, TEU_BUFFER)
+    plan = plan_mesh_exchange(op, s.tile, (2, 2))
+    # A invariant along j, B along i -> both shareable on a 2x2 mesh
+    assert plan.sharing_factor > 1.5
+    assert plan.fifo_hop_bytes > 0
+
+
+def test_exchange_monotone_in_mesh_size():
+    op = matmul_op(512, 512, 512)
+    s = search_tiles(op, TEU_BUFFER)
+    p22 = plan_mesh_exchange(op, s.tile, (2, 2))
+    p44 = plan_mesh_exchange(op, s.tile, (4, 4))
+    assert p44.sharing_factor >= p22.sharing_factor
+
+
+def test_restricted_sharing_worse():
+    """Eyeriss-style one-axis multicast shares less than the FIFO mesh."""
+    op = matmul_op(256, 256, 256)
+    s = search_tiles(op, TEU_BUFFER)
+    full = plan_mesh_exchange(op, s.tile, (4, 4))
+    restricted = plan_mesh_exchange(op, s.tile, (4, 4), share_cols=False)
+    assert restricted.fetch_bytes >= full.fetch_bytes
+
+
+def test_grid_order_beats_worst_order():
+    op = matmul_op(512, 512, 512)
+    s = search_tiles(op, TEU_BUFFER)
+    best = order_grid_for_sharing(op, s.tile)
+    names = [d.name for d in op.dims]
+    worst = max(
+        (grid_fetch_bytes(op, s.tile, tuple(p) )
+         for p in itertools.permutations(names)))
+    assert best.total_fetch_bytes <= worst
+
+
+def test_grid_order_exhaustive_optimal():
+    """The chosen parallel-dim order is optimal among permutations with
+    temporal innermost."""
+    op = conv2d_op(32, 16, 16, 16, 3, 3)
+    s = search_tiles(op, TEU_BUFFER)
+    best = order_grid_for_sharing(op, s.tile)
+    par = [d.name for d in op.parallel_dims]
+    tmp = [d.name for d in op.temporal_dims]
+    for p in itertools.permutations(par):
+        order = tuple(p) + tuple(tmp)
+        assert grid_fetch_bytes(op, s.tile, order) >= best.total_fetch_bytes

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32):
+    a = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(a, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(16, 16, 16), (70, 50, 130), (128, 64, 32),
+                                   (1, 256, 96)])
+def test_matmul_sweep(shape, dtype):
+    M, N, K = shape
+    a, b = _arr((M, K), dtype), _arr((K, N), dtype)
+    out = ops.matmul(a, b, block_m=32, block_n=32, block_k=64)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.matmul_ref(a, b), np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("stride,dilation", [(1, 1), (2, 1), (1, 2), (2, 2)])
+@pytest.mark.parametrize("kh,kw", [(3, 3), (1, 7), (5, 5), (1, 1)])
+def test_conv2d_sweep(stride, dilation, kh, kw):
+    x = _arr((2, 18, 17, 6))
+    w = _arr((kh, kw, 6, 10))
+    if (18 - (kh - 1) * dilation - 1) < 0:
+        pytest.skip("kernel larger than input")
+    out = ops.conv2d(x, w, stride=stride, dilation=dilation,
+                     block_oh=4, block_co=8)
+    r = ref.conv2d_ref(x, w, stride=stride, dilation=dilation)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("radius", [1, 2, 4])
+@pytest.mark.parametrize("H,W,C", [(12, 10, 8), (8, 8, 16), (16, 6, 4)])
+def test_correlation_sweep(radius, H, W, C):
+    i1, i2 = _arr((H, W, C)), _arr((H, W, C))
+    out = ops.correlation(i1, i2, radius=radius, block_y=4)
+    r = ref.correlation_ref(i1, i2, radius=radius)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("H,Hkv", [(8, 8), (8, 2), (4, 1)])
+def test_flash_attention_sweep(causal, H, Hkv):
+    B, S, Dh = 2, 24, 16
+    q = _arr((B, H, S, Dh))
+    k = _arr((B, Hkv, S, Dh))
+    v = _arr((B, Hkv, S, Dh))
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=8, block_k=8)
+    r = ref.attention_ref(q.reshape(B * H, S, Dh),
+                          k.reshape(B * Hkv, S, Dh),
+                          v.reshape(B * Hkv, S, Dh),
+                          causal=causal).reshape(B, H, S, Dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_flash_attention_window():
+    B, H, Hkv, S, Dh = 1, 4, 2, 32, 8
+    q, k, v = _arr((B, H, S, Dh)), _arr((B, Hkv, S, Dh)), _arr((B, Hkv, S, Dh))
+    out = ops.flash_attention(q, k, v, causal=True, window=8,
+                              block_q=8, block_k=8)
+    r = ref.attention_ref(q.reshape(B * H, S, Dh), k.reshape(B * Hkv, S, Dh),
+                          v.reshape(B * Hkv, S, Dh), causal=True,
+                          window=8).reshape(B, H, S, Dh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("lens", [[32, 10, 1], [5, 5, 5]])
+def test_flash_decode(lens):
+    B, H, Hkv, S, Dh = 3, 8, 2, 32, 16
+    q = _arr((B, H, Dh))
+    kc, vc = _arr((B, Hkv, S, Dh)), _arr((B, Hkv, S, Dh))
+    lengths = jnp.asarray(lens, jnp.int32)
+    out = ops.flash_decode(q, kc, vc, lengths, block_k=8)
+    G = H // Hkv
+    r = ref.decode_ref(q.reshape(B, Hkv, G, Dh).reshape(B * Hkv, G, Dh),
+                       kc.reshape(B * Hkv, S, Dh), vc.reshape(B * Hkv, S, Dh),
+                       jnp.repeat(lengths, Hkv)).reshape(B, Hkv, G, Dh)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(r.reshape(B, H, Dh)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_blocks_follow_tile_search():
+    """ops.matmul default blocks come from the paper's tile search."""
+    from repro.core.pallas_bridge import matmul_block_shapes
+    bm, bn, bk = matmul_block_shapes(4096, 4096, 4096)
+    assert bm % 128 == 0 and bn % 128 == 0
+    assert bm * bk * 2 + bk * bn * 2 <= 8 * 1024 * 1024

@@ -1,0 +1,73 @@
+"""Unit tests: NDRange tensor-op formulation (paper Eq. 1-3)."""
+import pytest
+
+from repro.core import (conv2d_op, correlation_op, depthwise_conv2d_op,
+                        matmul_op, attention_scores_op)
+from repro.core.ndrange import AffineExpr, Dim, TEMPORAL
+
+
+def test_matmul_counts():
+    op = matmul_op(64, 32, 16)
+    assert op.total_macs() == 64 * 32 * 16
+    full = op.full_tile()
+    A, B = op.inputs
+    assert A.footprint_elems(full) == 64 * 16
+    assert B.footprint_elems(full) == 16 * 32
+    assert op.output.footprint_elems(full) == 64 * 32
+
+
+def test_matmul_tile_footprints_match_eq4():
+    """(t_i + t_j) * t_k input words per t_i*t_j*t_k MACs (paper Eq. 4)."""
+    op = matmul_op(64, 64, 64)
+    tile = {"i": 8, "j": 16, "k": 32}
+    assert op.tile_input_bytes(tile) == (8 * 32 + 32 * 16) * 2
+    assert op.tile_macs(tile) == 8 * 16 * 32
+    assert op.tile_psum_elems(tile) == 8 * 16
+
+
+def test_conv_footprint_overlap():
+    """Conv input windows overlap: extent = stride*(t-1) + dilated kernel."""
+    op = conv2d_op(8, 4, 10, 10, 3, 3, stride=2, dilation=2)
+    tile = {"co": 2, "y": 4, "x": 5, "ci": 4, "m": 3, "n": 3}
+    I = op.inputs[0]
+    # y axis: 2*(4-1) + 2*(3-1) + 1 = 11 rows
+    assert I.index_exprs[1].extent(tile) == 11
+    assert I.index_exprs[2].extent(tile) == 2 * 4 + 2 * 2 + 1
+
+
+def test_invariant_dims_match_paper_fig2():
+    """dA/dj = 0 -> A shareable along j (paper Fig. 2)."""
+    op = matmul_op(8, 8, 8)
+    A, B = op.inputs
+    assert A.invariant_dims(op.dims) == ("j",)
+    assert B.invariant_dims(op.dims) == ("i",)
+
+
+def test_correlation_formulation():
+    op = correlation_op(5, 5, 8, 8, 16)
+    assert op.total_macs() == 5 * 5 * 8 * 8 * 16
+    I1, I2 = op.inputs
+    # I1 does not depend on the displacement dims (k, l): shareable
+    assert set(I1.invariant_dims(op.dims)) == {"k", "l"}
+    assert I2.invariant_dims(op.dims) == ()
+
+
+def test_depthwise_no_channel_reduction():
+    op = depthwise_conv2d_op(16, 8, 8, 3, 3)
+    assert op.total_macs() == 16 * 8 * 8 * 9
+
+
+def test_attention_is_spatial_matching():
+    op = attention_scores_op(4, 16, 16, 8)
+    Q, K = op.inputs
+    assert "s" in Q.invariant_dims(op.dims)   # Q shared across kv positions
+    assert "q" in K.invariant_dims(op.dims)   # K shared across queries
+
+
+def test_output_on_temporal_rejected():
+    with pytest.raises(ValueError):
+        from repro.core.ndrange import OperandView, TensorOp
+        dims = (Dim("i", 4, "parallel"), Dim("k", 4, TEMPORAL))
+        bad_out = OperandView("C", (AffineExpr.of({"k": 1}),))
+        ins = (OperandView("A", (AffineExpr.of({"i": 1}),)),)
+        TensorOp("bad", dims, ins, bad_out)

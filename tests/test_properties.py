@@ -1,0 +1,90 @@
+"""Hypothesis property tests on the scheduler's invariants."""
+import math
+
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core import (BufferSpec, conv2d_op, matmul_op, search_tiles,
+                        schedule_for, tile_fits, traffic,
+                        plan_mesh_exchange, order_grid_for_sharing,
+                        grid_fetch_bytes)
+
+dims = st.integers(min_value=8, max_value=512).map(lambda v: (v // 8) * 8)
+
+
+@given(M=dims, N=dims, K=dims)
+@settings(max_examples=30, deadline=None)
+def test_matmul_bytes_per_mac_closed_form(M, N, K):
+    """Eq. 4: bytes/MAC = bpe*(t_i + t_j)/(t_i*t_j) for any valid tile."""
+    op = matmul_op(M, N, K)
+    tile = {"i": min(16, M), "j": min(32, N), "k": min(64, K)}
+    got = op.tile_bytes_per_mac(tile)
+    want = 2 * (tile["i"] + tile["j"]) / (tile["i"] * tile["j"])
+    assert abs(got - want) < 1e-12
+
+
+@given(M=dims, N=dims, K=dims,
+       ib=st.integers(2_000, 64_000), pb=st.integers(1_000, 16_000))
+@settings(max_examples=30, deadline=None)
+def test_search_always_fits(M, N, K, ib, pb):
+    op = matmul_op(M, N, K)
+    buf = BufferSpec(input_bytes=ib, psum_bytes=pb)
+    try:
+        s = search_tiles(op, buf)
+    except ValueError:
+        return  # genuinely infeasible is acceptable
+    assert s.input_bytes <= ib and s.psum_bytes <= pb
+    assert all(1 <= s.tile[d.name] <= d.size for d in op.dims)
+
+
+@given(M=dims, N=dims, K=dims, R=st.integers(1, 4), C=st.integers(1, 4))
+@settings(max_examples=30, deadline=None)
+def test_sharing_never_increases_fetches(M, N, K, R, C):
+    """FIFO-mesh exchange can only reduce global fetches (paper Fig. 2)."""
+    op = matmul_op(M, N, K)
+    s = search_tiles(op)
+    plan = plan_mesh_exchange(op, s.tile, (R, C))
+    assert plan.fetch_bytes <= plan.fetch_bytes_unshared
+    # conservation: shared bytes moved over FIFOs instead of the GLB
+    assert plan.fetch_bytes + plan.fifo_hop_bytes >= plan.fetch_bytes_unshared
+
+
+@given(M=dims, N=dims, K=dims)
+@settings(max_examples=20, deadline=None)
+def test_grid_order_no_worse_than_lexicographic(M, N, K):
+    op = matmul_op(M, N, K)
+    s = search_tiles(op)
+    best = order_grid_for_sharing(op, s.tile)
+    lex = tuple(d.name for d in op.dims)
+    assert best.total_fetch_bytes <= grid_fetch_bytes(op, s.tile, lex)
+
+
+@given(Co=st.integers(8, 64), Ci=st.integers(4, 64),
+       o=st.integers(8, 64), k=st.sampled_from([1, 3, 5, 7]))
+@settings(max_examples=30, deadline=None)
+def test_traffic_lower_bound_is_unique_data(Co, Ci, o, k):
+    """No schedule fetches less than one pass over the unique data."""
+    assume(o > k)
+    op = conv2d_op(Co, Ci, o, o, k, k)
+    s = search_tiles(op)
+    t = traffic(op, s.tile, shared_axes=tuple(d.name for d in op.dims))
+    full = op.full_tile()
+    unique = sum(v.footprint_bytes(full) for v in op.inputs)
+    assert t.input_fetch_bytes >= unique
+
+
+@given(b=st.integers(1, 4), s=st.integers(4, 32), h=st.integers(1, 4),
+       d=st.sampled_from([4, 8]))
+@settings(max_examples=20, deadline=None)
+def test_blocked_attention_equals_full(b, s, h, d):
+    """Property: the flash-style blocked XLA attention == full softmax."""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.layers import _attention_blocked, _grouped_scores_full
+    key = jax.random.PRNGKey(b * 1000 + s * 10 + h)
+    q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, d))
+    full = _grouped_scores_full(q, k, v, causal=True, window=None)
+    blocked = _attention_blocked(q, k, v, causal=True, window=None,
+                                 q_chunk=4, k_chunk=8)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,81 @@
+"""Simulator reproduces the paper's Table III claims (within analytical-model
+tolerance; the paper's own Eyeriss repro differs ~10% from the reference)."""
+import pytest
+
+from repro.sim import CLASSIC, MODERN, SPATIAL, eyeriss, simulate, summarize, \
+    tpu, vectormesh
+
+
+@pytest.fixture(scope="module")
+def table3():
+    out = {}
+    for n_pe in (128, 512):
+        for name, mk in (("tpu", tpu), ("eyeriss", eyeriss),
+                         ("vectormesh", vectormesh)):
+            rs = [simulate(mk(n_pe), w) for w in CLASSIC]
+            out[(n_pe, name)] = summarize(rs)
+    return out
+
+
+def test_glb_reduction_vs_tpu(table3):
+    """Abstract: 'reduce global buffer fetches by 2-22x' (TPU is the 22x
+    end; paper Table III: 935/42=22.3 at 128 PE, 534/29=18.4 at 512)."""
+    for n_pe in (128, 512):
+        ratio = table3[(n_pe, "tpu")]["norm_glb"] / \
+            table3[(n_pe, "vectormesh")]["norm_glb"]
+        assert 10 <= ratio <= 40, ratio
+
+
+def test_glb_reduction_vs_eyeriss(table3):
+    """Paper: VectorMesh consumes 2-4x less GLB bandwidth than Eyeriss."""
+    ratio = table3[(128, "eyeriss")]["norm_glb"] / \
+        table3[(128, "vectormesh")]["norm_glb"]
+    assert 1.5 <= ratio <= 8, ratio
+
+
+def test_dram_reduction_vs_tpu(table3):
+    """Paper: 2-5x DRAM bandwidth reduction vs TPU."""
+    ratio = table3[(128, "tpu")]["norm_dram"] / \
+        table3[(128, "vectormesh")]["norm_dram"]
+    assert 1.8 <= ratio <= 6, ratio
+
+
+def test_dram_competitive_with_eyeriss(table3):
+    """Paper: -14%..+44% DRAM vs Eyeriss (i.e. roughly comparable)."""
+    for n_pe in (128, 512):
+        ratio = table3[(n_pe, "eyeriss")]["norm_dram"] / \
+            table3[(n_pe, "vectormesh")]["norm_dram"]
+        assert 0.6 <= ratio <= 2.5, ratio
+
+
+def test_vectormesh_closest_to_roofline(table3):
+    """Fig. 3: VectorMesh performs closest to the roofline."""
+    for n_pe in (128, 512):
+        vm = table3[(n_pe, "vectormesh")]["roofline_frac"]
+        assert vm >= table3[(n_pe, "tpu")]["roofline_frac"]
+        assert vm >= table3[(n_pe, "eyeriss")]["roofline_frac"]
+        assert vm > 0.6
+
+
+def test_absolute_performance_band(table3):
+    """Paper Table III: VM performance 20 GOPS @128PE, 68 @512PE (+-30%)."""
+    assert 14 <= table3[(128, "vectormesh")]["gmacs"] <= 26
+    assert 48 <= table3[(512, "vectormesh")]["gmacs"] <= 88
+
+
+def test_vm_supports_modern_and_spatial():
+    """Fig. 4: modern CNN + spatial matching run (exclusive workloads)."""
+    arch = vectormesh(512)
+    for w in MODERN + SPATIAL:
+        r = simulate(arch, w)
+        assert r.gmacs > 0
+        assert r.roofline_frac <= 1.01
+
+
+def test_mobilenet_depthwise_reaches_low_roofline():
+    """Fig. 4: MobileNet layers are memory-bound: low absolute perf but at
+    (or near) their own roofline."""
+    from repro.sim import by_name
+    r = simulate(vectormesh(512), by_name("MBN_DW_S1"))
+    assert r.roofline_gmacs < 30          # memory-bound roofline
+    assert r.roofline_frac > 0.4

@@ -1,0 +1,188 @@
+"""Data pipeline, optimizer, compression, checkpointing, fault runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager, latest_step, save_checkpoint
+from repro.data import DataConfig, ShardedLoader, SyntheticLM, \
+    make_train_iterator
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, compress_int8, cosine_schedule,
+                         decompress_int8)
+from repro.runtime import (HeartbeatMonitor, StragglerPolicy,
+                           plan_elastic_remesh)
+
+
+# ---------------- data ----------------
+
+def test_data_deterministic_and_indexable():
+    cfg = DataConfig(vocab=101, seq_len=32, global_batch=8, seed=3)
+    src = SyntheticLM(cfg)
+    b1 = src.batch(5, 0, 8)
+    b2 = src.batch(5, 0, 8)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (8, 32)
+    # labels are next tokens
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_host_sharding_partitions_batch():
+    cfg = DataConfig(vocab=101, seq_len=16, global_batch=8)
+    src = SyntheticLM(cfg)
+    full = src.batch(0, 0, 8)["tokens"]
+    l0 = ShardedLoader(src, 0, 2).batch(0)["tokens"]
+    l1 = ShardedLoader(src, 1, 2).batch(0)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([l0, l1]), full)
+
+
+def test_prefetcher_orders_batches():
+    cfg = DataConfig(vocab=101, seq_len=16, global_batch=4)
+    it = make_train_iterator(cfg, start_step=7)
+    try:
+        s0, _ = it.next()
+        s1, _ = it.next()
+        assert (s0, s1) == (7, 8)
+    finally:
+        it.close()
+
+
+def test_learnable_structure():
+    """The bigram skeleton makes next-token prediction learnable."""
+    cfg = DataConfig(vocab=64, seq_len=64, global_batch=16)
+    b = SyntheticLM(cfg).batch(0, 0, 16)
+    src = SyntheticLM(cfg)
+    follow = src._bigram[b["tokens"]]
+    agree = (follow == b["labels"]).mean()
+    assert agree > 0.5   # ~0.75 by construction
+
+
+# ---------------- optimizer ----------------
+
+def test_adamw_decreases_quadratic_loss():
+    params = {"w": jnp.array([2.0, -3.0])}
+    state = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0)
+    for _ in range(50):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(cfg, params, grads, state)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    total = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    np.testing.assert_allclose(float(total), 1.0, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(cosine_schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(cosine_schedule(cfg, jnp.asarray(100))) == pytest.approx(
+        cfg.min_lr_frac, rel=1e-3)
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_int8_compression_bounded_error(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, scale = compress_int8(x)
+    err = jnp.abs(decompress_int8(q, scale) - x).max()
+    amax = jnp.abs(x).max()
+    assert float(err) <= float(amax) / 127 + 1e-6
+
+
+# ---------------- checkpointing ----------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "b": {"c": np.ones((2,), np.int32)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    from repro.checkpoint import restore_checkpoint
+    like = jax.tree.map(lambda x: np.zeros_like(x), tree)
+    out = restore_checkpoint(str(tmp_path), 7, like)
+    np.testing.assert_array_equal(out["a"], tree["a"])
+    np.testing.assert_array_equal(out["b"]["c"], tree["b"]["c"])
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (1, 2, 3):
+        mgr.save_async(step, {"w": np.full((4,), step, np.float32)})
+        mgr.wait()
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [2, 3]
+    got = mgr.restore({"w": np.zeros((4,), np.float32)})
+    assert got is not None and got[0] == 3
+    np.testing.assert_array_equal(got[1]["w"], np.full((4,), 3, np.float32))
+
+
+def test_checkpoint_restore_reshards(tmp_path):
+    """Elastic path: restore applies a caller-provided sharding_fn."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save_async(1, {"w": np.arange(8, dtype=np.float32)})
+    mgr.wait()
+    calls = []
+    def shard(tree):
+        calls.append(True)
+        return tree
+    mgr.restore({"w": np.zeros(8, np.float32)}, sharding_fn=shard)
+    assert calls
+
+
+# ---------------- fault runtime ----------------
+
+def _clock():
+    t = [0.0]
+    def now():
+        return t[0]
+    return t, now
+
+
+def test_heartbeat_timeout_detection():
+    t, now = _clock()
+    mon = HeartbeatMonitor([0, 1, 2],
+                           StragglerPolicy(heartbeat_timeout_s=10),
+                           clock=now)
+    t[0] = 8.0
+    mon.heartbeat(0); mon.heartbeat(1)
+    t[0] = 16.0
+    failed = mon.check()
+    assert failed == [2]
+    assert mon.alive_hosts() == [0, 1]
+
+
+def test_straggler_eviction():
+    t, now = _clock()
+    pol = StragglerPolicy(straggler_factor=2.0, patience=3,
+                          heartbeat_timeout_s=1e9)
+    mon = HeartbeatMonitor([0, 1, 2, 3], pol, clock=now)
+    for step in range(5):
+        for h in (0, 1, 2):
+            mon.heartbeat(h, step_time_s=1.0)
+        mon.heartbeat(3, step_time_s=5.0)   # chronically slow
+        mon.check()
+    assert 3 not in mon.alive_hosts()
+
+
+def test_elastic_remesh_power_of_two_dp():
+    plan = plan_elastic_remesh(list(range(7)), chips_per_host=8,
+                               model_parallel=16)
+    # 7 hosts * 8 chips = 56 chips; mp=16 -> dp in {1, 2} -> dp=2, 4 hosts
+    assert plan.data_parallel == 2
+    assert plan.n_hosts == 4
+    assert set(plan.host_ranks.values()) == set(range(4))
+
+
+def test_elastic_remesh_insufficient_raises():
+    with pytest.raises(AssertionError):
+        plan_elastic_remesh([0], chips_per_host=8, model_parallel=16)

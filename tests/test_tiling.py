@@ -1,0 +1,61 @@
+"""Tile search (paper §II-B): capacity constraints + bandwidth optimality."""
+import math
+
+import pytest
+
+from repro.core import (TEU_BUFFER, BufferSpec, conv2d_op, matmul_op,
+                        search_tiles, schedule_for, tile_fits, traffic)
+
+
+def test_search_respects_buffers():
+    op = matmul_op(512, 512, 512)
+    s = search_tiles(op, TEU_BUFFER)
+    assert s.input_bytes <= TEU_BUFFER.input_bytes
+    assert s.psum_bytes <= TEU_BUFFER.psum_bytes
+
+
+def test_search_minimizes_bytes_per_mac():
+    """No power-of-two tile that fits beats the chosen one."""
+    op = matmul_op(256, 256, 256)
+    best = search_tiles(op, TEU_BUFFER)
+    from repro.core.ndrange import enumerate_tiles
+    for tile in enumerate_tiles(op):
+        if tile_fits(op, tile, TEU_BUFFER):
+            assert op.tile_bytes_per_mac(tile) >= best.bytes_per_mac - 1e-12
+
+
+def test_square_psum_tile_is_optimal_shape():
+    """For matmul, (t_i + t_j)/(t_i t_j) is minimized by square tiles."""
+    op = matmul_op(1024, 1024, 1024)
+    s = search_tiles(op, TEU_BUFFER)
+    assert s.tile["i"] == s.tile["j"]
+
+
+def test_infeasible_raises():
+    op = matmul_op(8, 8, 8)
+    with pytest.raises(ValueError):
+        search_tiles(op, BufferSpec(input_bytes=4, psum_bytes=1))
+
+
+def test_traffic_sharing_reduces_fetches():
+    op = matmul_op(256, 256, 256)
+    s = search_tiles(op, TEU_BUFFER)
+    t0 = traffic(op, s.tile)
+    t1 = traffic(op, s.tile, shared_axes=("i", "j"))
+    assert t1.input_fetch_bytes < t0.input_fetch_bytes
+    assert t1.output_write_bytes == t0.output_write_bytes
+
+
+def test_output_written_once():
+    """PSum-stationary scheduling: one external write per output element."""
+    op = conv2d_op(16, 8, 12, 12, 3, 3)
+    s = search_tiles(op, TEU_BUFFER)
+    t = traffic(op, s.tile)
+    assert t.output_write_bytes == 16 * 12 * 12 * 2
+
+
+def test_conv_search_fits_and_nontrivial():
+    op = conv2d_op(64, 32, 26, 26, 3, 3)
+    s = search_tiles(op, TEU_BUFFER)
+    assert s.macs > 32 * 32          # bigger than a trivial tile
+    assert s.input_bytes <= TEU_BUFFER.input_bytes
