@@ -1,0 +1,118 @@
+"""Scheduler-engine micro-benchmark: µs per tile search / exchange plan.
+
+Times the vectorized + pruned + memoized engine (``repro.core.autotune``)
+against the brute-force reference on the four op families, in three modes:
+
+  * ``engine_cold`` — in-process LRU cleared before every call (pure
+    vectorize+prune cost, what a first-ever query pays);
+  * ``engine_warm`` — repeated query, LRU hit (what the simulator pays for
+    every (arch, workload) revisit);
+  * ``reference``   — the pre-engine pure-Python lattice scan.
+
+Output rows follow the repo convention ``name,us_per_call,derived``; the
+``derived`` column carries the cold/warm speedup over the reference, e.g.
+``sched_conv2d_hot_engine_cold,7421,speedup=38.4x`` means one cold engine
+search of the ResNet conv layer took 7.4 ms and was 38.4x faster than the
+brute force.  The headline acceptance row is ``sched_conv2d_hot_*``:
+``conv2d_op(128, 128, 56, 56, 3, 3)`` — the §II-B hot case.
+
+Run directly (``PYTHONPATH=src python benchmarks/bench_scheduler.py``);
+pass ``--no-reference`` to skip the slow brute-force timings (the speedup
+column then reads ``speedup=n/a``).  ``--reps N`` controls the median-of-N
+timing (default 5, reference capped at 3).
+"""
+import argparse
+import statistics
+import time
+
+from repro.core import (TEU_BUFFER, attention_scores_op, clear_cache,
+                        conv2d_op, correlation_op, matmul_op,
+                        order_grid_for_sharing,
+                        order_grid_for_sharing_reference, search_tiles,
+                        search_tiles_reference)
+
+CASES = [
+    ("matmul_1k", lambda: matmul_op(1024, 1024, 1024)),
+    ("conv2d_hot", lambda: conv2d_op(128, 128, 56, 56, 3, 3)),
+    ("correlation", lambda: correlation_op(9, 9, 32, 32, 64)),
+    ("attention", lambda: attention_scores_op(16, 512, 512, 64)),
+]
+
+
+def _median_us(fn, reps: int) -> float:
+    ts = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
+
+
+def rows(reps: int = 5, reference: bool = True):
+    # Time the in-memory engine only: the on-disk tier (REPRO_SCHED_DISK_CACHE,
+    # enabled by benchmarks/run.py) would turn "cold" into a disk hit.
+    import os
+    prev = os.environ.get("REPRO_SCHED_DISK_CACHE")
+    os.environ["REPRO_SCHED_DISK_CACHE"] = "0"
+    try:
+        return _rows(reps, reference)
+    finally:
+        if prev is None:
+            del os.environ["REPRO_SCHED_DISK_CACHE"]
+        else:
+            os.environ["REPRO_SCHED_DISK_CACHE"] = prev
+
+
+def _rows(reps: int, reference: bool):
+    out = []
+    for name, mk in CASES:
+        op = mk()
+
+        def cold():
+            clear_cache()
+            search_tiles(op, TEU_BUFFER)
+
+        cold_us = _median_us(cold, reps)
+        search_tiles(op, TEU_BUFFER)  # prime
+        warm_us = _median_us(lambda: search_tiles(op, TEU_BUFFER), reps)
+        ref_us = (_median_us(lambda: search_tiles_reference(op, TEU_BUFFER),
+                             min(reps, 3)) if reference else None)
+        out.append({"case": name, "engine_cold_us": cold_us,
+                    "engine_warm_us": warm_us, "reference_us": ref_us})
+
+        tile = search_tiles(op, TEU_BUFFER).tile
+        clear_cache()
+        o_cold = _median_us(
+            lambda: (clear_cache(), order_grid_for_sharing(op, tile)), reps)
+        o_ref = (_median_us(
+            lambda: order_grid_for_sharing_reference(op, tile),
+            min(reps, 3)) if reference else None)
+        out.append({"case": f"{name}_gridorder", "engine_cold_us": o_cold,
+                    "engine_warm_us": _median_us(
+                        lambda: order_grid_for_sharing(op, tile), reps),
+                    "reference_us": o_ref})
+    return out
+
+
+def main(csv=True, reps: int = 5, reference: bool = True):
+    rs = rows(reps=reps, reference=reference)
+    if csv:
+        print("name,us_per_call,derived")
+        for r in rs:
+            ref = r["reference_us"]
+            for mode in ("engine_cold", "engine_warm"):
+                us = r[f"{mode}_us"]
+                sp = f"{ref / us:.1f}x" if ref else "n/a"
+                print(f"sched_{r['case']}_{mode},{us:.0f},speedup={sp}")
+            if ref:
+                print(f"sched_{r['case']}_reference,{ref:.0f},speedup=1.0x")
+    return rs
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--no-reference", action="store_true",
+                    help="skip brute-force reference timings")
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args()
+    main(reps=args.reps, reference=not args.no_reference)

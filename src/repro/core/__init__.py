@@ -24,6 +24,7 @@ from .tiling import (
     TrafficReport,
     schedule_for,
     search_tiles,
+    search_tiles_reference,
     tile_fits,
     traffic,
 )
@@ -32,8 +33,11 @@ from .exchange import (
     GridOrder,
     grid_fetch_bytes,
     order_grid_for_sharing,
+    order_grid_for_sharing_reference,
     plan_mesh_exchange,
+    plan_mesh_exchange_reference,
 )
+from .autotune import cache_stats, clear_cache, op_signature
 from . import bfn
 from .pallas_bridge import KernelPlan, matmul_block_shapes, plan_kernel
 
@@ -42,8 +46,11 @@ __all__ = [
     "attention_scores_op", "conv2d_op", "correlation_op",
     "depthwise_conv2d_op", "matmul_op",
     "BufferSpec", "TEU_BUFFER", "VMEM_BUFFER", "TileSchedule",
-    "TrafficReport", "schedule_for", "search_tiles", "tile_fits", "traffic",
+    "TrafficReport", "schedule_for", "search_tiles",
+    "search_tiles_reference", "tile_fits", "traffic",
     "ExchangePlan", "GridOrder", "grid_fetch_bytes", "order_grid_for_sharing",
-    "plan_mesh_exchange",
+    "order_grid_for_sharing_reference", "plan_mesh_exchange",
+    "plan_mesh_exchange_reference",
+    "cache_stats", "clear_cache", "op_signature",
     "bfn", "KernelPlan", "matmul_block_shapes", "plan_kernel",
 ]

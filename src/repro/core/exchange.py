@@ -57,6 +57,22 @@ def plan_mesh_exchange(op: TensorOp, tile: Mapping[str, int],
                        share_cols: bool = True,
                        row_span_cap: int | None = None,
                        col_span_cap: int | None = None) -> ExchangePlan:
+    """Memoized front door for mesh-exchange planning (see the reference
+    below for the semantics; repeated (op, tile, mesh) queries — e.g. the
+    simulator's PE sweeps — hit the ``repro.core.autotune`` cache)."""
+    from .autotune import plan_mesh_exchange_engine  # lazy: import cycle
+    return plan_mesh_exchange_engine(
+        op, tile, mesh_shape, share_rows=share_rows, share_cols=share_cols,
+        row_span_cap=row_span_cap, col_span_cap=col_span_cap)
+
+
+def plan_mesh_exchange_reference(op: TensorOp, tile: Mapping[str, int],
+                                 mesh_shape: tuple[int, int], *,
+                                 share_rows: bool = True,
+                                 share_cols: bool = True,
+                                 row_span_cap: int | None = None,
+                                 col_span_cap: int | None = None
+                                 ) -> ExchangePlan:
     """Pick the (row_axis, col_axis) mesh layout minimizing global fetches.
 
     Execution proceeds in waves of R*C tiles. Within a wave, an operand that is
@@ -147,19 +163,31 @@ def grid_fetch_bytes(op: TensorOp, tile: Mapping[str, int],
     return total
 
 
-def order_grid_for_sharing(op: TensorOp, tile: Mapping[str, int],
-                           *, temporal_innermost: bool = True) -> GridOrder:
+def order_grid_for_sharing(op: TensorOp,
+                           tile: Mapping[str, int]) -> GridOrder:
     """Choose the grid order minimizing HBM refetches (max VMEM residency).
 
-    ``temporal_innermost`` keeps reduction dims innermost so the f32
-    accumulator drains exactly once per output block (paper's PSum-stationary
-    rule); only the relative order of parallel dims is searched.
+    Reduction dims always stay innermost so the f32 accumulator drains
+    exactly once per output block (paper's PSum-stationary rule); only the
+    relative order of parallel dims is searched.
+
+    Delegates to ``repro.core.autotune.order_grid_engine``: all parallel-dim
+    permutations are scored in one NumPy reduction and the result is
+    memoized.  ``order_grid_for_sharing_reference`` keeps the original
+    per-permutation Python scan for equivalence testing.
     """
+    from .autotune import order_grid_engine  # lazy: avoids import cycle
+    return order_grid_engine(op, tile)
+
+
+def order_grid_for_sharing_reference(op: TensorOp,
+                                     tile: Mapping[str, int]) -> GridOrder:
+    """Brute-force reference for ``order_grid_for_sharing``."""
     par = [d.name for d in op.parallel_dims]
     tmp = [d.name for d in op.temporal_dims]
     best: GridOrder | None = None
     for perm in itertools.permutations(par):
-        order = tuple(perm) + tuple(tmp) if temporal_innermost else tuple(perm + tmp)
+        order = tuple(perm) + tuple(tmp)
         fetch = grid_fetch_bytes(op, tile, order)
         naive = sum(v.footprint_bytes(tile) for v in op.inputs) * op.num_tiles(tile)
         g = GridOrder(order, naive - fetch, fetch)

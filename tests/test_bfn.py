@@ -1,4 +1,7 @@
 """Butterfly-network conflict-free condition (paper §II-C) — property tests."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import bfn

@@ -64,6 +64,41 @@ def test_attention_is_spatial_matching():
     assert "q" in K.invariant_dims(op.dims)   # K shared across queries
 
 
+def test_tile_candidates_pow2_ladder():
+    from repro.core.ndrange import tile_candidates
+    op = matmul_op(64, 100, 8)
+    pow2 = tile_candidates(op)
+    # powers of two up to the dim size, plus the size itself
+    assert pow2[0] == [1, 2, 4, 8, 16, 32, 64]
+    assert pow2[1] == [1, 2, 4, 8, 16, 32, 64, 100]
+    assert pow2[2] == [1, 2, 4, 8]
+
+
+def test_tile_candidates_dense_ladder():
+    """pow2=False adds the 1.5x midpoints — a strictly denser ladder, not
+    the squared progression (1, 2, 4, 16, 256, ...) of the old bug."""
+    from repro.core.ndrange import tile_candidates
+    op = matmul_op(64, 100, 8)
+    dense = tile_candidates(op, pow2=False)
+    assert dense[0] == [1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64]
+    assert dense[2] == [1, 2, 3, 4, 6, 8]
+    # every pow2 candidate is still present
+    for p2, dn in zip(tile_candidates(op), dense):
+        assert set(p2) <= set(dn)
+    # enumerate_tiles agrees with the candidate lists
+    from repro.core.ndrange import enumerate_tiles
+    seen = {t["i"] for t in enumerate_tiles(op, pow2=False)}
+    assert seen == set(dense[0])
+
+
+def test_enumerate_tiles_respects_caps():
+    from repro.core.ndrange import enumerate_tiles
+    op = matmul_op(64, 64, 64)
+    tiles = list(enumerate_tiles(op, caps={"i": 8}))
+    assert max(t["i"] for t in tiles) == 8
+    assert max(t["j"] for t in tiles) == 64
+
+
 def test_output_on_temporal_rejected():
     with pytest.raises(ValueError):
         from repro.core.ndrange import OperandView, TensorOp

@@ -1,6 +1,9 @@
 """Hypothesis property tests on the scheduler's invariants."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import assume, given, settings, strategies as st
 
 from repro.core import (BufferSpec, conv2d_op, matmul_op, search_tiles,

@@ -54,6 +54,33 @@ def test_output_written_once():
     assert t.output_write_bytes == 16 * 12 * 12 * 2
 
 
+def test_traffic_matmul_hand_computed():
+    """Pin exact traffic() byte counts (guards the fetch arithmetic)."""
+    op = matmul_op(64, 64, 64)                    # bf16: 2 B/elem
+    tile = {"i": 16, "j": 16, "k": 32}
+    t = traffic(op, tile)
+    # A tile: 16x32 elems, B tile: 32x16 elems; 4*4*2 = 32 tiles, no sharing
+    assert t.input_fetch_bytes == (16 * 32 + 32 * 16) * 2 * 32 == 65536
+    assert t.output_write_bytes == 64 * 64 * 2 == 8192
+    assert t.total_macs == 64 ** 3
+    # sharing along j: A (invariant to j) fetched once per 4-tile j-group
+    tj = traffic(op, tile, shared_axes=("j",))
+    assert tj.input_fetch_bytes == 1024 * (32 // 4) + 1024 * 32 == 40960
+
+
+def test_traffic_conv_hand_computed():
+    op = conv2d_op(8, 4, 8, 8, 3, 3)
+    tile = {"co": 4, "y": 4, "x": 4, "ci": 4, "m": 3, "n": 3}
+    t = traffic(op, tile)
+    # I tile: 4 ci x (4+3-1) x (4+3-1) = 144 elems; K tile: 4*4*3*3 = 144;
+    # grid = 2*2*2 = 8 tiles
+    assert t.input_fetch_bytes == (144 + 144) * 2 * 8 == 4608
+    assert t.output_write_bytes == 8 * 8 * 8 * 2 == 1024
+    # I is invariant to co: shared along co it is fetched once per co-pair
+    tc = traffic(op, tile, shared_axes=("co",))
+    assert tc.input_fetch_bytes == 288 * (8 // 2) + 288 * 8 == 3456
+
+
 def test_conv_search_fits_and_nontrivial():
     op = conv2d_op(64, 32, 26, 26, 3, 3)
     s = search_tiles(op, TEU_BUFFER)
