@@ -372,8 +372,18 @@ def order_grid_engine(op: TensorOp, tile: Mapping[str, int]):
         return GridOrder(tuple(d["order"]), d["resident_bytes_saved"],
                          d["total_fetch_bytes"])
 
-    return _memo(key, lambda: _order_grid_vectorized(op, tile),
-                 _schedule_to_json, from_json)
+    def compute():
+        # worst case over all permutations is the refetch-everything bound
+        # (num_tiles * sum of footprints); past int64-exact territory the
+        # vectorized prod would wrap silently, so use the big-int reference.
+        worst = op.num_tiles(tile) * sum(
+            v.footprint_bytes(tile) for v in op.inputs)
+        if worst >= _INT64_SAFE:
+            from .exchange import order_grid_for_sharing_reference
+            return order_grid_for_sharing_reference(op, tile)
+        return _order_grid_vectorized(op, tile)
+
+    return _memo(key, compute, _schedule_to_json, from_json)
 
 
 def _order_grid_vectorized(op: TensorOp, tile):

@@ -3,7 +3,8 @@
 NHWC x HWIO -> NHWC. The TEU tile maps to (a block of output rows) x (all
 columns) x (a block of output channels); the overlapping input window — the
 operand the FIFO mesh shares between neighbouring tiles in Fig. 2 — is
-expressed with an ``pl.Element``-indexed halo block, and is REUSED across all
+expressed with an element-indexed halo block (``compat.element_block_spec``,
+``pl.Element`` on new JAX / ``pl.Unblocked`` on 0.4.x), and is REUSED across all
 co-blocks because the grid order puts `co` innermost of the parallel dims
 (the block's index map is invariant to `co`, so Mosaic keeps it VMEM-resident
 — the intra-chip analogue of sharing E between P and Q). The reduction
@@ -17,6 +18,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.runtime import compat
 
 
 def _conv_kernel(x_ref, w_ref, o_ref, *, stride: int, dilation: int,
@@ -69,8 +72,9 @@ def conv2d_pallas(x: jax.Array, w: jax.Array, *, stride: int = 1,
         grid=grid,
         in_specs=[
             # Element-indexed rows: overlapping halo blocks; invariant to c.
-            pl.BlockSpec((1, pl.Element(ih_blk), IW, CI),
-                         lambda n, y, c: (n, y * block_oh * stride, 0, 0)),
+            compat.element_block_spec(
+                (1, compat.Element(ih_blk), IW, CI),
+                lambda n, y, c: (n, y * block_oh * stride, 0, 0)),
             pl.BlockSpec((KH, KW, CI, block_co), lambda n, y, c: (0, 0, 0, c)),
         ],
         out_specs=pl.BlockSpec((1, block_oh, OW, block_co),

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.runtime import compat
+
 
 def _corr_kernel(i1_ref, i2_ref, o_ref):
     # i1_ref: (by, W, C); i2_ref: (by, W, C) — the window shifted by (dy, dx)
@@ -44,8 +46,9 @@ def correlation_pallas(i1: jax.Array, i2_padded: jax.Array, *, radius: int,
             # across all D*D displacement steps (FIFO-mesh analogue).
             pl.BlockSpec((block_y, W, C), lambda y, dy, dx: (y, 0, 0)),
             # I2 window at displacement (dy, dx) — element-indexed halo.
-            pl.BlockSpec((pl.Element(block_y), pl.Element(W), C),
-                         lambda y, dy, dx: (y * block_y + dy, dx, 0)),
+            compat.element_block_spec(
+                (compat.Element(block_y), compat.Element(W), C),
+                lambda y, dy, dx: (y * block_y + dy, dx, 0)),
         ],
         out_specs=pl.BlockSpec((block_y, W, 1, 1),
                                lambda y, dy, dx: (y, 0, dy, dx)),

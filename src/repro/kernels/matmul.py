@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.runtime import compat
+
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref):
     # k == 0: reset the PSum buffer (paper: PSums stay static in the TEU).
@@ -43,15 +45,8 @@ def matmul_pallas(a: jax.Array, b: jax.Array, *, block_m: int, block_n: int,
     out_dtype = out_dtype or a.dtype
     grid = (M // block_m, N // block_n, K // block_k)
 
-    # jax >= 0.5 calls this CompilerParams; 0.4.x used TPUCompilerParams.
-    cls = getattr(pltpu, "CompilerParams", None) or \
-        getattr(pltpu, "TPUCompilerParams", None)
-    try:
-        params = cls(dimension_semantics=("parallel", "parallel", "arbitrary"))
-    except TypeError:  # pragma: no cover - signature drift
-        params = None
-
-    kwargs = dict(compiler_params=params) if params is not None else {}
+    kwargs = compat.tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
         _matmul_kernel,
         grid=grid,

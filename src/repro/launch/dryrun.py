@@ -26,6 +26,7 @@ from repro.analysis.roofline import (RooflineReport, collective_bytes,
 from repro.configs import ARCH_IDS, SHAPES, get_bundle
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import step_in_shardings
+from repro.runtime import compat
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
@@ -55,12 +56,12 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
             chips = mesh.devices.size
             args, shardings, step, donate = step_in_shardings(
                 bundle, shape, mesh)
-            with jax.set_mesh(mesh):
+            with compat.set_mesh(mesh):
                 lowered = jax.jit(step, in_shardings=shardings,
                                   donate_argnums=donate).lower(*args)
                 compiled = lowered.compile()
             mem = compiled.memory_analysis()
-            xla_cost = compiled.cost_analysis()
+            xla_cost = compat.cost_analysis(compiled)
             # scan-aware per-device costs (XLA's cost_analysis counts while
             # bodies once — see analysis/hlo_cost.py); x chips = global.
             hlo_txt = compiled.as_text()

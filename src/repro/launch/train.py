@@ -23,7 +23,7 @@ from repro.data import DataConfig, make_train_iterator
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.optim import AdamWConfig, adamw_init
 from repro.parallel.sharding import param_specs
-from repro.runtime import HeartbeatMonitor
+from repro.runtime import HeartbeatMonitor, compat
 from repro.training import TrainHyper, make_train_step
 
 
@@ -84,7 +84,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
             np.float32)
 
     try:
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             for i in range(start_step, start_step + steps):
                 t0 = time.time()
                 idx, batch = it.next()

@@ -18,6 +18,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import compat
+
 
 def shard_seq(x: jax.Array) -> jax.Array:
     """Megatron-style sequence parallelism at layer boundaries.
@@ -26,7 +28,7 @@ def shard_seq(x: jax.Array) -> jax.Array:
     so the per-layer residuals saved for backward shrink by the TP degree
     (the TP all-gather that follows is traffic the block pays anyway).
     No-op outside a mesh context or when S does not divide."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or getattr(mesh, "empty", False):
         return x
     if "model" not in mesh.axis_names:
@@ -45,7 +47,7 @@ def gather_seq(x: jax.Array) -> jax.Array:
     emits exactly one all-gather here and one reduce-scatter at the residual
     add (the Megatron-SP schedule), instead of resharding inside the
     attention scans."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or getattr(mesh, "empty", False):
         return x
     if "model" not in mesh.axis_names or mesh.shape["model"] == 1:
@@ -167,20 +169,11 @@ def _grouped_scores_chunked(q, k, v, *, causal, window, chunk: int = 1024,
             preferred_element_type=jnp.float32)
         return (m_new, l, acc), None
 
-    def match_vma(x):
-        # inside shard_map the carries must carry the same varying-manual
-        # axes as the data they will be combined with
-        try:
-            want = set(jax.typeof(qg).vma) - set(jax.typeof(x).vma)
-        except AttributeError:
-            return x
-        if want:
-            x = jax.lax.pcast(x, tuple(want), to="varying")
-        return x
-
-    m0 = match_vma(jnp.full((B, Hkv, G, S), -1e30, jnp.float32))
-    l0 = match_vma(jnp.zeros((B, Hkv, G, S), jnp.float32))
-    a0 = match_vma(jnp.zeros((B, Hkv, G, S, Dh), jnp.float32))
+    # inside shard_map the carries must carry the same varying-manual
+    # axes as the data they will be combined with
+    m0 = compat.match_vma(jnp.full((B, Hkv, G, S), -1e30, jnp.float32), qg)
+    l0 = compat.match_vma(jnp.zeros((B, Hkv, G, S), jnp.float32), qg)
+    a0 = compat.match_vma(jnp.zeros((B, Hkv, G, S, Dh), jnp.float32), qg)
     (m, l, acc), _ = jax.lax.scan(
         step, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
     o = acc / jnp.where(l == 0, 1.0, l)[..., None]
@@ -236,7 +229,7 @@ def _attention_ring(q, k, v, *, causal, window):
     layer, instead of the per-q-block score-partial all-reduces GSPMD
     emits for the constraint-based layout. Returns None when inapplicable
     (no mesh / indivisible shapes) so the caller can fall back."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or getattr(mesh, "empty", False):
         return None
     if "model" not in mesh.axis_names or mesh.shape["model"] == 1:
@@ -310,9 +303,7 @@ def _attention_ring(q, k, v, *, causal, window):
             v_c = jax.lax.ppermute(v_c, "model", perm)
             return (k_c, v_c, st)
 
-        vary = lambda x: jax.lax.pcast(  # noqa: E731
-            x, tuple(set(jax.typeof(qg).vma) - set(jax.typeof(x).vma)),
-            to="varying") if hasattr(jax, "typeof") else x
+        vary = lambda x: compat.match_vma(x, qg)  # noqa: E731
         st0 = (vary(jnp.full((B_l, Hkv, G, S_l), -1e30, jnp.float32)),
                vary(jnp.zeros((B_l, Hkv, G, S_l), jnp.float32)),
                vary(jnp.zeros((B_l, Hkv, G, S_l, Dh_l), jnp.float32)))
@@ -329,7 +320,7 @@ def _attention_ring(q, k, v, *, causal, window):
     # needs a checkpointed fold / custom VJP before becoming the default —
     # recorded as §Perf B6 (refuted as measured), enumerated next step.
     use_ring = RING_PPERMUTE and (S // m) <= 4096
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         ring_body if use_ring else body, mesh=mesh,
         in_specs=(P(dspec, "model", None, None),
                   P(dspec, "model" if use_ring else None, None, None),
@@ -349,7 +340,7 @@ def _shard_attn_inputs(q, k, v):
     SEQUENCE over `model` and replicate k/v (k/v are kv-heads-only, a few
     hundred MB) — every device computes its own q rows, no sharded
     contractions, attention traffic drops by the TP degree."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or getattr(mesh, "empty", False):
         return q, k, v
     if "model" not in mesh.axis_names or mesh.shape["model"] == 1:
@@ -365,7 +356,7 @@ def _shard_qblocks(qb):
     """Shard the q-chunk rows of the blocked layout (nq, B, qc, H, Dh) over
     `model` — the constraint must live on the POST-reshape tensor or GSPMD
     re-replicates every scan step (§Perf iteration C3')."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or getattr(mesh, "empty", False):
         return qb
     if "model" not in mesh.axis_names or mesh.shape["model"] == 1:
@@ -641,7 +632,7 @@ def moe_layer(x: jax.Array, params: dict[str, jax.Array],
         keeps all experts with 1/16 of each FFN, tokens stay put, psum after
         w_down.
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if (mesh is None or getattr(mesh, "empty", False)
             or "model" not in getattr(mesh, "axis_names", ())
             or mesh.shape["model"] == 1):
@@ -672,13 +663,13 @@ def moe_layer(x: jax.Array, params: dict[str, jax.Array],
             axes = daxes + ("model",)
             if not seq_split:
                 out = jax.lax.psum(out, "model") / msize
-                aux = jax.lax.pcast(aux, ("model",), to="varying")
+                aux = compat.pcast(aux, ("model",), to="varying")
             n = 1
             for a in axes:
                 n *= jax.lax.psum(1, a)
             return out, jax.lax.psum(aux, axes) / n
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             wrapped, mesh=mesh,
             in_specs=(x_spec, P(None, None),
                       P("model", None, None), P("model", None, None),
@@ -703,7 +694,7 @@ def moe_layer(x: jax.Array, params: dict[str, jax.Array],
                 n *= jax.lax.psum(1, a)
             return out, jax.lax.psum(aux, axes_all) / n
 
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             split_body, mesh=mesh,
             in_specs=(P(dspec, "model", None), P(None, None),
                       P(None, None, None), P(None, None, None),
@@ -718,13 +709,13 @@ def moe_layer(x: jax.Array, params: dict[str, jax.Array],
         out, aux = _moe_local(x, {"router": router, "w_gate": wg,
                                   "w_up": wu, "w_down": wd}, cfg)
         out = jax.lax.psum(out, "model")
-        aux = jax.lax.pcast(aux, ("model",), to="varying")
+        aux = compat.pcast(aux, ("model",), to="varying")
         n = 1
         for a in axes_all:
             n *= jax.lax.psum(1, a)
         return out, jax.lax.psum(aux, axes_all) / n
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         tp_body, mesh=mesh,
         in_specs=(P(dspec, None, None), P(None, None),
                   P(None, None, "model"), P(None, None, "model"),

@@ -125,10 +125,13 @@ def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
         xq, dtq, Bq, Cq, acum, atot = inp
         # decay from step j to end of chunk / to step i
         # intra-chunk (the "diag block" GEMM of SSD):
-        Lmat = jnp.exp(acum[:, :, None, :] - acum[:, None, :, :])  # (B,Q,Q,H)
         idx = jnp.arange(acum.shape[1])
         causal = (idx[:, None] >= idx[None, :])[None, :, :, None]
-        Lmat = jnp.where(causal, Lmat, 0.0)
+        # mask the EXPONENT, not just the product: non-causal entries have
+        # positive log-decay sums that overflow exp to inf, and
+        # where(causal, inf, 0) back-propagates inf * 0 = NaN into acum.
+        diff = acum[:, :, None, :] - acum[:, None, :, :]            # (B,Q,Q,H)
+        Lmat = jnp.where(causal, jnp.exp(jnp.where(causal, diff, 0.0)), 0.0)
         scores = jnp.einsum("bin,bjn->bij", Cq, Bq)                # (B,Q,Q)
         w = scores[..., None] * Lmat * dtq[:, None, :, :]           # (B,Q,Q,H)
         y_diag = jnp.einsum("bijh,bjhp->bihp", w, xq)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.runtime import compat
+
 
 def pipeline_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
                      stage_params: Any, x_micro: jax.Array, mesh: Mesh,
@@ -65,16 +67,16 @@ def pipeline_forward(stage_fn: Callable[[Any, jax.Array], jax.Array],
             inflight = jax.lax.ppermute(y, axis, fwd_perm)
             return (inflight, outs)
 
-        inflight0 = jax.lax.pcast(jnp.zeros_like(xs[0]), (axis,),
-                                  to="varying")
-        outs0 = jax.lax.pcast(jnp.zeros(xs.shape, xs.dtype), (axis,),
-                              to="varying")
+        inflight0 = compat.pcast(jnp.zeros_like(xs[0]), (axis,),
+                                 to="varying")
+        outs0 = compat.pcast(jnp.zeros(xs.shape, xs.dtype), (axis,),
+                             to="varying")
         _, outs = jax.lax.fori_loop(0, ticks, tick, (inflight0, outs0))
         # only the last stage ever wrote into `outs`; psum replicates it.
         return jax.lax.psum(outs, axis)
 
     spec_p = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(spec_p, P()),
-                       out_specs=P())
+    fn = compat.shard_map(body, mesh=mesh,
+                          in_specs=(spec_p, P()),
+                          out_specs=P())
     return fn(stage_params, x_micro)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.runtime import compat
+
 
 def _ring_body(a_blk: jax.Array, b_blk: jax.Array, axis: str,
                out_dtype) -> jax.Array:
@@ -50,7 +52,7 @@ def _ring_body(a_blk: jax.Array, b_blk: jax.Array, axis: str,
     out0 = jnp.zeros((m_local, n_local * n), out_dtype)
     # the carry becomes device-varying after the first update/ppermute; mark
     # the initial values accordingly (jax >= 0.7 vma typing).
-    out0 = jax.lax.pcast(out0, (axis,), to="varying")
+    out0 = compat.pcast(out0, (axis,), to="varying")
     _, out = jax.lax.fori_loop(0, n, step, (b_blk, out0))
     return out
 
@@ -63,7 +65,7 @@ def ring_matmul(a: jax.Array, b: jax.Array, mesh: Mesh, axis: str = "model",
     jnp.dot can itself be the Pallas TEU matmul on real hardware.
     """
     out_dtype = out_dtype or a.dtype
-    fn = shard_map_fn = jax.shard_map(
+    fn = shard_map_fn = compat.shard_map(
         functools.partial(_ring_body, axis=axis, out_dtype=out_dtype),
         mesh=mesh,
         in_specs=(P(axis, None), P(None, axis)),
@@ -88,7 +90,7 @@ def allgather_matmul(a: jax.Array, b: jax.Array, mesh: Mesh,
         return jnp.dot(a_blk, b_full,
                        preferred_element_type=jnp.float32).astype(out_dtype)
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(P(axis, None), P(None, axis)),
-                       out_specs=P(axis, None))
+    fn = compat.shard_map(body, mesh=mesh,
+                          in_specs=(P(axis, None), P(None, axis)),
+                          out_specs=P(axis, None))
     return fn(a, b)

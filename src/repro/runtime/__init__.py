@@ -1,5 +1,6 @@
+from . import compat
 from .fault import (ElasticPlan, HeartbeatMonitor, HostState, StragglerPolicy,
                     plan_elastic_remesh)
 
 __all__ = ["ElasticPlan", "HeartbeatMonitor", "HostState", "StragglerPolicy",
-           "plan_elastic_remesh"]
+           "compat", "plan_elastic_remesh"]

@@ -1,0 +1,313 @@
+"""Version-adaptive JAX portability layer.
+
+Every symbol that drifted across the JAX releases this repo supports is
+resolved ONCE here, at import time, and the rest of the codebase imports
+from this module instead of touching the drifting API directly.  The
+supported range is jax 0.4.37 (the pinned container baseline) through the
+current ≥ 0.6/0.7 API family; each shim prefers the NEW spelling when it
+exists and falls back to an equivalent on older releases, so the same
+source runs unmodified on both ends of the range.
+
+Shim inventory (new spelling -> introduced -> old fallback):
+
+``make_mesh(axis_shapes, axis_names)``
+    ``jax.make_mesh`` (added 0.4.35).  Fallback: build the device array
+    with ``jax.experimental.mesh_utils.create_device_mesh`` and wrap it
+    in ``jax.sharding.Mesh`` — identical semantics, no device reordering
+    heuristics beyond what mesh_utils already applies.
+
+``set_mesh(mesh)``
+    Ambient-mesh context manager.  Prefers ``jax.set_mesh`` (promoted to
+    the top level around 0.7, usable as a context manager), then
+    ``jax.sharding.use_mesh`` (the experimental spelling added ~0.5.x).
+    Fallback (0.4.x): a ``contextmanager`` that (a) records the concrete
+    mesh in a module thread-local so :func:`get_abstract_mesh` can see it
+    and (b) enters the legacy ``with mesh:`` resource env, which is what
+    makes ``jax.lax.with_sharding_constraint(x, PartitionSpec(...))``
+    accept bare PartitionSpecs on 0.4.x (outside a resource env that call
+    raises ``RuntimeError: ... requires a non-empty mesh``).
+
+``get_abstract_mesh()``
+    ``jax.sharding.get_abstract_mesh`` (added ~0.5.0; returns an
+    ``AbstractMesh``, empty when no ambient mesh is set).  Fallback: the
+    thread-local *concrete* Mesh recorded by :func:`set_mesh`, or ``None``
+    when no mesh context is active.  Callers therefore must treat "no
+    mesh" as ``mesh is None or getattr(mesh, "empty", False)`` — both
+    representations satisfy that test, and a concrete Mesh supports the
+    same ``axis_names`` / ``shape`` lookups the call sites use.
+
+``shard_map(f, *, mesh, in_specs, out_specs, ...)``
+    ``jax.shard_map`` (public at the top level since ~0.6).  Fallback:
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep=False`` —
+    0.4.x's replication checker predates the vma/pvary typing the new
+    call sites rely on (they mark carries varying via :func:`pcast`,
+    which is an identity on 0.4.x), so the old checker would reject
+    otherwise-correct programs.  Disabling it trades away a static check
+    and some transpose efficiency, never numerics.
+
+``pcast(x, axes, to="varying")`` / ``vma(x)`` / ``match_vma(x, like)``
+    The varying-manual-axes type system: ``jax.lax.pcast`` (0.7; 0.6
+    spelled the varying direction ``jax.lax.pvary``) and
+    ``jax.typeof(x).vma`` (0.6).  Fallback: ``pcast`` is the identity and
+    ``vma`` returns ``frozenset()`` — on 0.4.x (with ``check_rep=False``)
+    nothing tracks replication, so "already matches" is the correct
+    degenerate answer.  ``match_vma(x, like)`` is the common idiom
+    (promote ``x`` to carry every varying axis ``like`` has) packaged so
+    call sites don't reimplement the set arithmetic.
+
+``Element(n)`` / ``element_block_spec(block_shape, index_map)``
+    Per-dimension element-indexed Pallas blocks: ``pl.Element`` (added
+    with the BlockSpec indexing rework, ~0.6; the same rework REMOVED the
+    0.4.x ``indexing_mode=`` argument, so the two spellings are mutually
+    exclusive).  ``Element`` here is always this module's int-subclass
+    marker; :func:`element_block_spec` translates it per version:
+
+    * new JAX: marker dims become real ``pl.Element(n)`` dims and the
+      user index map passes through untouched (element offsets for
+      Element dims, block indices for Blocked dims);
+    * 0.4.x: the whole spec is lowered to ``indexing_mode=pl.Unblocked()``
+      (element offsets for EVERY dim) and the index map is wrapped to
+      rescale the Blocked dims' block indices by their block sizes.
+      Semantics are identical; only the index arithmetic moves.
+
+``tpu_compiler_params(**kwargs)``
+    ``pltpu.CompilerParams`` (renamed ~0.6/0.7) vs ``TPUCompilerParams``
+    (0.4.x–0.5.x).  Returns a ``{"compiler_params": ...}`` kwargs dict
+    ready to splat into ``pl.pallas_call``, or ``{}`` when neither class
+    exists or the signature rejects the request (signature drift) — the
+    params are a performance hint, so dropping them is always safe.
+
+``cost_analysis(compiled)``
+    ``Compiled.cost_analysis()`` returns a per-module ``dict`` on ≥ 0.5
+    but a one-element ``list`` of dicts on 0.4.x.  This wrapper always
+    returns the flat dict (``{}`` for an empty list).
+
+``tree_map`` / ``tree_leaves`` / ``tree_flatten`` / ``tree_unflatten``
+    ``jax.tree.*`` (added 0.4.25, the preferred spelling; the historical
+    ``jax.tree_map`` aliases were deleted in 0.6).  Fallback:
+    ``jax.tree_util.tree_*``, which exist everywhere.
+
+``random_key(seed)``
+    Typed PRNG keys: ``jax.random.key`` (0.4.16).  Fallback:
+    ``jax.random.PRNGKey`` (raw uint32 keys).  Both feed every
+    ``jax.random`` sampler in the supported range.
+
+Import-order note: the Pallas shims resolve ``jax.experimental.pallas``
+lazily on first use (cached thereafter), so sim/benchmark entry points
+that never touch a kernel don't pay the Pallas import; nothing in this
+module touches device state, so importing it cannot pin a backend.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable, Sequence
+
+import jax
+
+__all__ = [
+    "JAX_VERSION",
+    "make_mesh", "set_mesh", "get_abstract_mesh", "shard_map",
+    "pcast", "vma", "match_vma",
+    "Element", "element_block_spec", "tpu_compiler_params",
+    "cost_analysis",
+    "tree_map", "tree_leaves", "tree_flatten", "tree_unflatten",
+    "random_key",
+]
+
+JAX_VERSION: tuple[int, ...] = tuple(
+    int(p) for p in jax.__version__.split(".")[:3] if p.isdigit())
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "make_mesh"):
+    make_mesh = jax.make_mesh
+else:  # pragma: no cover - exercised only on jax < 0.4.35
+    def make_mesh(axis_shapes: Sequence[int],
+                  axis_names: Sequence[str]) -> jax.sharding.Mesh:
+        from jax.experimental import mesh_utils
+        devices = mesh_utils.create_device_mesh(tuple(axis_shapes))
+        return jax.sharding.Mesh(devices, tuple(axis_names))
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh context: set_mesh / get_abstract_mesh
+# ---------------------------------------------------------------------------
+
+_tls = threading.local()
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+elif hasattr(jax.sharding, "use_mesh"):
+    set_mesh = jax.sharding.use_mesh
+else:
+    @contextlib.contextmanager
+    def set_mesh(mesh: jax.sharding.Mesh):
+        prev = getattr(_tls, "mesh", None)
+        _tls.mesh = mesh
+        try:
+            # legacy resource env: lets with_sharding_constraint resolve
+            # bare PartitionSpecs against `mesh` while tracing inside.
+            with mesh:
+                yield mesh
+        finally:
+            _tls.mesh = prev
+
+
+if hasattr(jax.sharding, "get_abstract_mesh"):
+    get_abstract_mesh = jax.sharding.get_abstract_mesh
+else:
+    def get_abstract_mesh():
+        return getattr(_tls, "mesh", None)
+
+
+# ---------------------------------------------------------------------------
+# shard_map
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    def shard_map(f: Callable, *, mesh=None, in_specs, out_specs, **kwargs):
+        kwargs.setdefault("check_rep", False)
+        return _shard_map_experimental(f, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Varying-manual-axes (vma) typing: pcast / vma / match_vma
+# ---------------------------------------------------------------------------
+
+if hasattr(jax.lax, "pcast"):
+    pcast = jax.lax.pcast
+elif hasattr(jax.lax, "pvary"):
+    def pcast(x, axes, to: str = "varying"):
+        if to != "varying":
+            raise NotImplementedError(
+                f"pcast(to={to!r}) has no jax-0.6 equivalent shimmed here")
+        return jax.lax.pvary(x, axes)
+else:
+    def pcast(x, axes, to: str = "varying"):
+        return x
+
+
+def vma(x) -> frozenset:
+    """The varying manual axes of ``x``'s type; empty pre-0.6 (untracked)."""
+    try:
+        return frozenset(jax.typeof(x).vma)
+    except AttributeError:
+        return frozenset()
+
+
+def match_vma(x, like):
+    """Promote ``x`` to carry every varying axis ``like`` carries.
+
+    Inside shard_map on ≥ 0.6, scan/loop carries must be typed with the
+    same varying axes as the values they combine with; pre-0.6 this is a
+    no-op because nothing is tracked."""
+    want = vma(like) - vma(x)
+    if want:
+        x = pcast(x, tuple(want), to="varying")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Pallas: element-indexed BlockSpecs
+# ---------------------------------------------------------------------------
+
+_pallas_mod = None
+
+
+def _pallas():
+    """Lazy, cached ``jax.experimental.pallas`` — kernels are the only
+    consumers, so pure-sim entry points never pay this import."""
+    global _pallas_mod
+    if _pallas_mod is None:
+        from jax.experimental import pallas
+        _pallas_mod = pallas
+    return _pallas_mod
+
+
+class Element(int):
+    """Marker for a block dim whose index-map output is an ELEMENT offset
+    (halo/overlapping windows), not a block index.  Use only inside
+    :func:`element_block_spec` block shapes."""
+
+
+def element_block_spec(block_shape: Sequence[int],
+                       index_map: Callable[..., tuple]):
+    """BlockSpec mixing :class:`Element` (element-indexed) and plain int
+    (block-indexed) dims.  ``index_map`` follows the NEW JAX convention:
+    element offsets for Element dims, block indices for the rest."""
+    pl = _pallas()
+    pl_element = getattr(pl, "Element", None)
+    if pl_element is not None:
+        shape = tuple(pl_element(int(d)) if isinstance(d, Element) else d
+                      for d in block_shape)
+        return pl.BlockSpec(shape, index_map)
+    sizes = tuple(int(d) for d in block_shape)
+    is_element = tuple(isinstance(d, Element) for d in block_shape)
+
+    def as_element_offsets(*grid_idx):
+        idx = index_map(*grid_idx)
+        return tuple(i if e else i * s
+                     for i, e, s in zip(idx, is_element, sizes))
+
+    return pl.BlockSpec(sizes, as_element_offsets,
+                        indexing_mode=pl.Unblocked())
+
+
+# ---------------------------------------------------------------------------
+# Pallas: TPU compiler params
+# ---------------------------------------------------------------------------
+
+def tpu_compiler_params(**kwargs) -> dict[str, Any]:
+    """``{"compiler_params": <params>}`` to splat into ``pl.pallas_call``,
+    or ``{}`` when the class is missing or its signature rejects ``kwargs``
+    (params are a scheduling hint — dropping them is always safe)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = (getattr(pltpu, "CompilerParams", None)
+           or getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:
+        return {}
+    try:
+        return {"compiler_params": cls(**kwargs)}
+    except TypeError:
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# Compiled-artifact introspection
+# ---------------------------------------------------------------------------
+
+def cost_analysis(compiled) -> dict[str, float]:
+    """Flat cost dict from a ``Compiled`` object (0.4.x returns a
+    one-element list of dicts; ≥ 0.5 returns the dict directly)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Tree / random aliases
+# ---------------------------------------------------------------------------
+
+if hasattr(jax, "tree") and hasattr(jax.tree, "map"):
+    tree_map = jax.tree.map
+    tree_leaves = jax.tree.leaves
+    tree_flatten = jax.tree.flatten
+    tree_unflatten = jax.tree.unflatten
+else:  # pragma: no cover - exercised only on jax < 0.4.25
+    from jax import tree_util as _tree_util
+    tree_map = _tree_util.tree_map
+    tree_leaves = _tree_util.tree_leaves
+    tree_flatten = _tree_util.tree_flatten
+    tree_unflatten = _tree_util.tree_unflatten
+
+random_key = getattr(jax.random, "key", None) or jax.random.PRNGKey

@@ -25,11 +25,12 @@ def _run(code: str, devices: int = 8, timeout: int = 560):
 def test_ring_matmul_and_baseline():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.runtime import compat
 from repro.parallel.ring_matmul import ring_matmul, ring_matmul_ref, allgather_matmul
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 a = jax.random.normal(jax.random.PRNGKey(0), (16, 32), jnp.float32)
 b = jax.random.normal(jax.random.PRNGKey(1), (32, 24), jnp.float32)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     out = ring_matmul(a, b, mesh, axis="model")
     out2 = allgather_matmul(a, b, mesh, axis="model")
 ref = ring_matmul_ref(a, b)
@@ -43,11 +44,12 @@ def test_ring_matmul_fewer_resident_bytes():
     full B operand in memory; the all-gather baseline does."""
     _run("""
 import jax, jax.numpy as jnp
+from repro.runtime import compat
 from repro.parallel.ring_matmul import ring_matmul, allgather_matmul
-mesh = jax.make_mesh((1, 8), ("data", "model"))
+mesh = compat.make_mesh((1, 8), ("data", "model"))
 a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
 b = jax.ShapeDtypeStruct((512, 1024), jnp.float32)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     ring = jax.jit(lambda a, b: ring_matmul(a, b, mesh, axis="model")).lower(a, b).compile()
     ag = jax.jit(lambda a, b: allgather_matmul(a, b, mesh, axis="model")).lower(a, b).compile()
 rt = ring.memory_analysis().temp_size_in_bytes
@@ -60,13 +62,14 @@ print("ring temp", rt, "< allgather temp", at)
 def test_pipeline_parallel_forward():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.runtime import compat
 from repro.parallel.pipeline import pipeline_forward
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 def stage_fn(params, x):
     return jnp.tanh(x @ params["w"])
 sp = {"w": jax.random.normal(jax.random.PRNGKey(2), (2, 8, 8), jnp.float32) * 0.5}
 xm = jax.random.normal(jax.random.PRNGKey(3), (4, 3, 8), jnp.float32)
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     out = jax.jit(lambda p, x: pipeline_forward(stage_fn, p, x, mesh))(sp, xm)
 ref = xm
 for s in range(2):
@@ -78,9 +81,10 @@ np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-
 def test_moe_distribution_modes():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.runtime import compat
 from repro.models.layers import MoEConfig, _moe_local, moe_layer
 key = jax.random.PRNGKey(0); D = 12
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 for E, S in [(8, 8), (8, 1), (6, 8), (6, 1)]:
     cfg = MoEConfig(n_experts=E, top_k=2, d_ff=16, capacity_factor=8.0)
     p = {
@@ -91,7 +95,7 @@ for E, S in [(8, 8), (8, 1), (6, 8), (6, 1)]:
     }
     x = jax.random.normal(jax.random.fold_in(key,4), (4, S, D), jnp.float32)
     ref, _ = _moe_local(x, p, cfg)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out, _ = jax.jit(lambda x, p: moe_layer(x, p, cfg))(x, p)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
 print("all moe modes ok")
@@ -103,6 +107,7 @@ def test_sharded_train_step_matches_single_device():
     unsharded step — distribution must not change the math."""
     _run("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.runtime import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_bundle
 from repro.optim import adamw_init
@@ -117,11 +122,11 @@ batch = {"tokens": jax.random.randint(k, (8, 16), 0, bundle.cfg.vocab),
 step = make_train_step(bundle.forward, TrainHyper())
 _, _, m_ref = jax.jit(step)(params, opt, batch)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 pspecs = param_specs(bundle.kind, params, mesh)
 psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                    is_leaf=lambda x: isinstance(x, P))
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     params_s = jax.device_put(params, psh)
     opt_s = adamw_init(params_s)
     _, _, m_sh = jax.jit(step)(params_s, opt_s, batch)
@@ -133,14 +138,15 @@ print("sharded ce", float(m_sh["ce"]), "ref", float(m_ref["ce"]))
 def test_compressed_gradient_psum():
     _run("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.runtime import compat
 from jax.sharding import PartitionSpec as P
 from repro.optim.compression import ef_compressed_psum, init_error_feedback
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+mesh = compat.make_mesh((2, 2, 2), ("pod", "data", "model"))
 g = {"w": jax.random.normal(jax.random.PRNGKey(4), (8, 8), jnp.float32)}
 e = init_error_feedback(g)
-fn = jax.shard_map(lambda g, e: ef_compressed_psum(g, e, "pod"),
+fn = compat.shard_map(lambda g, e: ef_compressed_psum(g, e, "pod"),
                    mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()))
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     rg, re = jax.jit(fn)(g, e)
 err = np.abs(np.asarray(rg["w"]) - np.asarray(g["w"])).max()
 amax = np.abs(np.asarray(g["w"])).max()
@@ -155,9 +161,10 @@ def test_ring_attention_matches_reference():
     """shard_map ring attention (fwd + grads + window) vs the full oracle."""
     _run("""
 import jax, jax.numpy as jnp, numpy as np
+from repro.runtime import compat
 from repro.models import layers
 from repro.models.layers import _attention_ring, _grouped_scores_full
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+mesh = compat.make_mesh((2, 4), ("data", "model"))
 key = jax.random.PRNGKey(0)
 B, S, H, Dh = 4, 32, 8, 16
 q = jax.random.normal(key, (B, S, H, Dh), jnp.float32)
@@ -166,7 +173,7 @@ v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 2, Dh), jnp.float32)
 ref = _grouped_scores_full(q, k, v, causal=True, window=None)
 for ring in (False, True):     # B5 replicated-k/v mode + B6 ppermute ring
     layers.RING_PPERMUTE = ring
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         out = jax.jit(lambda q, k, v: _attention_ring(q, k, v, causal=True, window=None))(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=3e-4, atol=3e-4)
 layers.RING_PPERMUTE = False
@@ -174,7 +181,7 @@ def loss(q, k, v):
     return (_attention_ring(q, k, v, causal=True, window=None) ** 2).sum()
 def loss_ref(q, k, v):
     return (_grouped_scores_full(q, k, v, causal=True, window=None) ** 2).sum()
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     g = jax.jit(jax.grad(loss, argnums=(0, 1, 2)))(q, k, v)
 g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
 for a, b in zip(g, g_ref):
