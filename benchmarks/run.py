@@ -13,10 +13,12 @@ def main() -> None:
     # start warm (see repro/core/autotune.py; delete .cache/ to reset).
     os.environ.setdefault("REPRO_SCHED_DISK_CACHE", "1")
     from benchmarks import (bench_dryrun, bench_kernels, bench_roofline_fig3,
-                            bench_roofline_fig4, bench_scheduler, bench_table3)
+                            bench_roofline_fig4, bench_scheduler,
+                            bench_serving, bench_table3)
     print("name,us_per_call,derived")
     for mod in (bench_scheduler, bench_table3, bench_roofline_fig3,
-                bench_roofline_fig4, bench_kernels, bench_dryrun):
+                bench_roofline_fig4, bench_kernels, bench_serving,
+                bench_dryrun):
         buf = io.StringIO()
         with redirect_stdout(buf):
             mod.main(csv=True)

@@ -13,9 +13,12 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--kv-mode", default="dense",
+                    choices=("dense", "paged", "paged_int8"))
     a = ap.parse_args()
     results = run(a.arch, smoke=True, n_requests=a.requests, slots=a.slots,
-                  max_new=a.max_new, prompt_len=10, max_len=48)
+                  max_new=a.max_new, prompt_len=10, max_len=48,
+                  kv_mode=a.kv_mode)
     for rid, toks in sorted(results.items()):
         print(f"request {rid}: generated {toks}")
 

@@ -74,18 +74,62 @@ class ArchBundle:
         return self.family.init_cache(self.cfg, batch, max_len,
                                       kv_dtype=kv_dtype)
 
-    def prefill(self, params, tokens, cache, batch_extras=None):
+    def prefill(self, params, tokens, cache, batch_extras=None,
+                true_lengths=None):
+        if true_lengths is not None and not self.prefill_supports_true_lengths:
+            raise ValueError(
+                f"{self.arch_id}: family does not support bucketed "
+                "(true_lengths) prefill")
         if self.kind == "audio":
             return self.family.prefill(self.cfg, params, tokens, cache,
                                        (batch_extras or {})["frames"])
         if self.kind == "vlm":
+            kw = {}
+            if true_lengths is not None:
+                # the vision prefix is prepended inside prefill, so true
+                # sequence lengths shift by the (fixed) prefix size
+                vis = (batch_extras or {}).get("vision")
+                off = vis.shape[1] if vis is not None else 0
+                kw["true_lengths"] = true_lengths + off
             return self.family.prefill(
                 self.cfg, params, tokens, cache,
-                vision_embeds=(batch_extras or {}).get("vision"))
-        return self.family.prefill(self.cfg, params, tokens, cache)
+                vision_embeds=(batch_extras or {}).get("vision"), **kw)
+        kw = {} if true_lengths is None else {"true_lengths": true_lengths}
+        return self.family.prefill(self.cfg, params, tokens, cache, **kw)
 
     def decode_step(self, params, tokens, cache):
         return self.family.decode_step(self.cfg, params, tokens, cache)
+
+    # -- serving capabilities ---------------------------------------------
+    @property
+    def prefill_supports_true_lengths(self) -> bool:
+        """Whether prefill accepts length-bucketed padded prompts (KV
+        caches with per-position writes; SSM states do not qualify)."""
+        return bool(getattr(self.family, "PREFILL_TRUE_LENGTHS", False)) \
+            and self.kind != "audio"
+
+    @property
+    def supports_paged_kv(self) -> bool:
+        # vlm excluded: the vision prefix enters through dense prefill's
+        # embedding concat; the paged chunked-prefill path is token-only.
+        return bool(getattr(self.family, "SUPPORTS_PAGED_KV", False)) \
+            and self.kind != "vlm"
+
+    def init_paged_pool(self, num_pages: int, page_size: int, kv_dtype=None):
+        return self.family.init_paged_pool(self.cfg, num_pages, page_size,
+                                           kv_dtype=kv_dtype)
+
+    def paged_step(self, params, tokens, pool, page_table, lengths, counts):
+        return self.family.paged_step(self.cfg, params, tokens, pool,
+                                      page_table, lengths, counts)
+
+    def cache_batch_axes(self, cache) -> dict:
+        """Batch-axis index for every cache entry (pooled slot writes).
+        Families declare ``CACHE_BATCH_AXES``; unknown keys fall back to
+        the historical heuristic (axis 0 for 1-D entries, else axis 1)."""
+        declared = getattr(self.family, "CACHE_BATCH_AXES", {})
+        return {k: declared.get(k, 0 if jnp.ndim(v) == 1 else 1)
+                for k, v in cache.items()}
 
     def min_hbm_bytes(self, shape_name: str) -> int:
         """Theoretical HBM traffic floor for one step of this shape.

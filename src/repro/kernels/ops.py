@@ -17,6 +17,7 @@ from . import attention as _attention
 from . import conv2d as _conv2d
 from . import correlation as _correlation
 from . import matmul as _matmul
+from . import paged_attention as _paged_attention
 
 
 def _interpret() -> bool:
@@ -128,3 +129,33 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     out = _attention.flash_decode_pallas(
         qf, kf, vf, lens, block_k=block_k, interpret=_interpret())
     return out.reshape(B, Hkv, G, Dh).reshape(B, Hq, Dh)
+
+
+@jax.jit
+def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       page_table: jax.Array, lengths: jax.Array,
+                       k_scale: jax.Array | None = None,
+                       v_scale: jax.Array | None = None) -> jax.Array:
+    """Paged decode: q (B, H, D) one token; pools (P, page, Hkv, D);
+    page_table (B, max_pages) physical page ids; lengths (B,) valid tokens;
+    optional int8-pool scales (P, page, Hkv).  Returns (B, H, D).
+
+    Per-slot tables/lengths are replicated across kv heads so the kernel
+    grid can stay flat (b, kv head); the pool transposes to kv-head-major
+    so the page axis is the one the table indexes."""
+    B, H, Dh = q.shape
+    P, page_size, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    qf = q.reshape(B, Hkv, G, Dh).reshape(B * Hkv, G, Dh)
+    kt = k_pages.transpose(2, 0, 1, 3)        # (Hkv, P, page, D)
+    vt = v_pages.transpose(2, 0, 1, 3)
+    pt = jnp.repeat(page_table.astype(jnp.int32), Hkv, axis=0)
+    lens = jnp.repeat(lengths.astype(jnp.int32), Hkv)
+    ks = vs = None
+    if k_scale is not None:
+        ks = k_scale.transpose(2, 0, 1)       # (Hkv, P, page)
+        vs = v_scale.transpose(2, 0, 1)
+    out = _paged_attention.paged_flash_decode_pallas(
+        qf, kt, vt, pt, lens, ks, vs, page_size=page_size,
+        interpret=_interpret())
+    return out.reshape(B, Hkv, G, Dh).reshape(B, H, Dh)

@@ -66,6 +66,41 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jnp.einsum("hqk,hkd->hqd", p, vv.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_decode_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                     page_table: jax.Array, lengths: jax.Array,
+                     k_scale: jax.Array | None = None,
+                     v_scale: jax.Array | None = None, *,
+                     scale: float | None = None) -> jax.Array:
+    """q: (B, H, D); k_pages/v_pages: (P, page, Hkv, D) global pools;
+    page_table: (B, max_pages); lengths: (B,); scales (int8 pools):
+    (P, page, Hkv) f32.  Gathers each slot's pages into a contiguous cache
+    then runs the dense decode oracle — the allclose target for
+    ``paged_attention.paged_flash_decode_pallas``."""
+    B, H, Dh = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    sc = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    S = page_table.shape[1] * page
+
+    def gather(pages, scales):
+        x = pages[page_table]                      # (B, MP, page, Hkv, D)
+        x = x.astype(jnp.float32)
+        if scales is not None:
+            x = x * scales[page_table][..., None]
+        return x.reshape(B, S, Hkv, Dh)
+
+    k = gather(k_pages, k_scale)
+    v = gather(v_pages, v_scale)
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k) * sc
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v)
+    return o.reshape(B, H, Dh).astype(q.dtype)
+
+
 def decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                lengths: jax.Array, *, scale: float | None = None) -> jax.Array:
     """q: (BHkv, G, D); caches (BHkv, S, D); lengths (BHkv,) -> (BHkv, G, D)."""

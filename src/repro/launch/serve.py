@@ -1,11 +1,16 @@
-"""Serving launcher: slot-based continuous-batching engine over a bundle.
+"""Serving launcher: continuous-batching engine (dense or paged KV) over a
+bundle.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 6
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+        --kv-mode paged --page-size 16
+
+Paged modes need a transformer-family arch (attention KV); SSM/audio
+families serve on the dense path.
 """
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax
@@ -16,18 +21,25 @@ from repro.serving import ServeConfig, ServingEngine
 
 
 class _BundleAdapter:
-    """Adapts an ArchBundle to the ServingEngine interface (binds extras)."""
+    """Adapts an ArchBundle to the ServingEngine interface (binds extras,
+    forwards the serving-capability surface)."""
 
     def __init__(self, bundle, extras=None):
         self.bundle = bundle
         self.extras = extras or {}
+        self.cfg = bundle.cfg
+        self.kind = bundle.kind
+        self.supports_paged_kv = bundle.supports_paged_kv
+        self.prefill_supports_true_lengths = \
+            bundle.prefill_supports_true_lengths
 
     def init_cache(self, batch, max_len):
         return self.bundle.init_cache(batch, max_len)
 
-    def prefill(self, params, tokens, cache):
+    def prefill(self, params, tokens, cache, true_lengths=None):
         return self.bundle.prefill(params, tokens, cache,
-                                   batch_extras=self._sized(tokens.shape[0]))
+                                   batch_extras=self._sized(tokens.shape[0]),
+                                   true_lengths=true_lengths)
 
     def _sized(self, b):
         return {k: v[:b] for k, v in self.extras.items()} or None
@@ -35,14 +47,28 @@ class _BundleAdapter:
     def decode_step(self, params, tokens, cache):
         return self.bundle.decode_step(params, tokens, cache)
 
+    def cache_batch_axes(self, cache):
+        return self.bundle.cache_batch_axes(cache)
 
-def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
-        slots: int = 4, prompt_len: int = 12, max_new: int = 8,
-        max_len: int = 64, seed: int = 0) -> dict:
+    def init_paged_pool(self, num_pages, page_size, kv_dtype=None):
+        return self.bundle.init_paged_pool(num_pages, page_size,
+                                           kv_dtype=kv_dtype)
+
+    def paged_step(self, params, tokens, pool, page_table, lengths, counts):
+        return self.bundle.paged_step(params, tokens, pool, page_table,
+                                      lengths, counts)
+
+
+def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
+                 max_len: int = 64, max_new: int = 8, kv_mode: str = "dense",
+                 page_size: int = 16, num_pages: int | None = None,
+                 prefill_chunk: int = 32, seed: int = 0, mesh=None):
+    """(engine, vocab) ready for submit()/run() — shared by the launcher,
+    tests and benchmarks so every caller serves through the same stack.
+    ``mesh`` (a concrete Mesh) shards the paged pool per
+    ``parallel.sharding.paged_pool_specs``."""
     bundle = get_bundle(arch, smoke=smoke)
-    vocab = bundle.cfg.vocab
     params = bundle.init_params(jax.random.PRNGKey(seed))
-
     extras = {}
     if bundle.kind == "audio":
         extras["frames"] = np.zeros(
@@ -50,21 +76,35 @@ def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
     if bundle.kind == "vlm":
         extras["vision"] = np.zeros(
             (slots, bundle.cfg.vision_tokens, bundle.cfg.d_model), np.float32)
+    engine = ServingEngine(
+        _BundleAdapter(bundle, extras), params,
+        ServeConfig(batch=slots, max_len=max_len, max_new_tokens=max_new,
+                    kv_mode=kv_mode, page_size=page_size,
+                    num_pages=num_pages, prefill_chunk=prefill_chunk),
+        mesh=mesh)
+    return engine, bundle.cfg.vocab
 
-    engine = ServingEngine(_BundleAdapter(bundle, extras), params,
-                           ServeConfig(batch=slots, max_len=max_len,
-                                       max_new_tokens=max_new))
+
+def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
+        slots: int = 4, prompt_len: int = 12, max_new: int = 8,
+        max_len: int = 64, seed: int = 0, kv_mode: str = "dense",
+        page_size: int = 16, num_pages: int | None = None) -> dict:
+    engine, vocab = build_engine(
+        arch, smoke=smoke, slots=slots, max_len=max_len, max_new=max_new,
+        kv_mode=kv_mode, page_size=page_size, num_pages=num_pages,
+        seed=seed)
     rng = np.random.default_rng(seed)
-    rids = []
     for _ in range(n_requests):
         prompt = rng.integers(0, vocab, size=prompt_len).astype(np.int32)
-        rids.append(engine.submit(prompt))
+        engine.submit(prompt)
     t0 = time.time()
     results = engine.run()
     dt = time.time() - t0
     total_tokens = sum(len(v) for v in results.values())
-    print(f"[serve] {n_requests} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s)")
+    stats = engine.kv_stats()
+    print(f"[serve:{kv_mode}] {n_requests} requests, {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
+          f"kv_resident={stats['bytes_resident']/1e6:.2f}MB)")
     return results
 
 
@@ -74,9 +114,14 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--kv-mode", default="dense",
+                    choices=("dense", "paged", "paged_int8"))
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None)
     a = ap.parse_args()
     results = run(a.arch, n_requests=a.requests, slots=a.slots,
-                  max_new=a.max_new)
+                  max_new=a.max_new, kv_mode=a.kv_mode,
+                  page_size=a.page_size, num_pages=a.num_pages)
     for rid, toks in sorted(results.items()):
         print(f"  req {rid}: {toks}")
 

@@ -478,6 +478,52 @@ def decode_attention(q, k_cache, v_cache, lengths, k_scale=None,
     return o.reshape(B, 1, H, Dh).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
+                           k_scale=None, v_scale=None, *, impl="xla"):
+    """Attention of freshly written tokens against a paged KV pool.
+
+    q: (B, T, H, Dh) — token t of row b sits at position ``lengths[b] + t``
+    and its K/V have already been scattered into the pool, so it attends
+    every position <= its own.  k_pages/v_pages: (P, page, Hkv, Dh) ONE
+    layer's global pool; page_table: (B, max_pages) physical ids (0 =
+    trash, always masked by the position bound); lengths: (B,) tokens
+    cached BEFORE this step's writes.  Scales (int8 pools): (P, page,
+    Hkv) f32.
+
+    ``impl='pallas'`` (T == 1 only) dispatches to the paged flash-decode
+    kernel, which chases the page table inside the grid — no gathered
+    contiguous cache ever materializes.  The XLA path gathers the mapped
+    pages (bounded by the page-table slice the engine passes, NOT by
+    max_len) and runs a masked softmax; it is the CPU/equivalence path."""
+    B, T, H, Dh = q.shape
+    P, page, Hkv, _ = k_pages.shape
+    if impl == "pallas" and T == 1:
+        from repro.kernels import ops as kops
+        o = kops.paged_flash_decode(q[:, 0], k_pages, v_pages, page_table,
+                                    lengths + 1, k_scale, v_scale)
+        return o[:, None].astype(q.dtype)
+    G = H // Hkv
+    S = page_table.shape[1] * page
+    scale = 1.0 / math.sqrt(Dh)
+
+    def gather(pages, scales):
+        x = pages[page_table].astype(jnp.float32)  # (B, MP, page, Hkv, D)
+        if scales is not None:
+            x = x * scales[page_table][..., None]
+        return x.reshape(B, S, Hkv, Dh)
+
+    k = gather(k_pages, k_scale)
+    v = gather(v_pages, v_scale)
+    qg = q.reshape(B, T, Hkv, G, Dh).astype(jnp.float32)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k) * scale
+    limit = lengths[:, None] + jnp.arange(T)[None, :]          # (B, T)
+    mask = jnp.arange(S)[None, None, :] <= limit[:, :, None]   # (B, T, S)
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    return o.reshape(B, T, H, Dh).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

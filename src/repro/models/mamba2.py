@@ -18,6 +18,11 @@ import jax.numpy as jnp
 
 from .layers import gather_seq, rms_norm, shard_seq
 
+# Pooled-serving slot layout (see serving/engine.py _write_slot): batch axis
+# of every cache entry.  SSM state caches are position-free, so padded
+# prefill would corrupt them — no PREFILL_TRUE_LENGTHS here.
+CACHE_BATCH_AXES = {"conv": 1, "ssm": 1, "length": 0}
+
 
 @dataclasses.dataclass(frozen=True)
 class Mamba2Config:

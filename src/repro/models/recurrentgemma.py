@@ -20,6 +20,13 @@ from .layers import (apply_rope, attention, decode_attention, gather_seq,
 
 RG_LRU_C = 8.0
 
+# Pooled-serving slot layout (see serving/engine.py _write_slot).  NOTE the
+# grouped recurrent states carry batch at axis 2 — (G, 2, batch, ...) — which
+# the seed engine's fixed axis-1 assumption silently corrupted; declaring the
+# axes here is what makes pooled slot writes correct for this family.
+CACHE_BATCH_AXES = {"conv_g": 2, "lru_g": 2, "k": 1, "v": 1,
+                    "conv_t": 1, "lru_t": 1, "length": 0}
+
 
 @dataclasses.dataclass(frozen=True)
 class RGConfig:

@@ -14,9 +14,18 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.runtime import compat
 from .layers import (MoEConfig, apply_rope, attention, decode_attention,
-                     gather_seq, moe_layer, quantize_kv, rms_norm,
-                     shard_seq, swiglu)
+                     gather_seq, moe_layer, paged_decode_attention,
+                     quantize_kv, rms_norm, shard_seq, swiglu)
+
+# Serving-engine capability flags (see configs/base.py and serving/engine.py):
+# prefill accepts ``true_lengths`` for length-bucketed padded prompts, the
+# KV cache pages cleanly (pure attention KV, per-position writes), and the
+# pooled-cache slot layout is declared instead of assumed.
+PREFILL_TRUE_LENGTHS = True
+SUPPORTS_PAGED_KV = True
+CACHE_BATCH_AXES = {"k": 1, "v": 1, "k_scale": 1, "v_scale": 1, "length": 0}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,10 +206,18 @@ def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
 
 
 def prefill(cfg: TransformerConfig, params: dict, tokens: jax.Array,
-            cache: dict, vision_embeds: jax.Array | None = None):
+            cache: dict, vision_embeds: jax.Array | None = None,
+            true_lengths: jax.Array | None = None):
     """Run the prompt through the model, filling the cache.
 
-    Returns (logits_last, cache)."""
+    Returns (logits_last, cache).
+
+    ``true_lengths`` (B,) supports length-BUCKETED prompts: tokens may be
+    right-padded to a bucket size, and causality guarantees every position
+    < true_lengths[b] is unaffected by the padding.  The cache length is
+    set to the true length (decode overwrites the first junk position and
+    masks the rest) and the returned logits are taken at position
+    ``true_lengths - 1`` instead of the padded last row."""
     x = params["embed"][tokens]
     if vision_embeds is not None:
         x = jnp.concatenate([vision_embeds.astype(x.dtype), x], axis=1)
@@ -222,7 +239,10 @@ def prefill(cfg: TransformerConfig, params: dict, tokens: jax.Array,
 
     x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
     kv_dt = cache["k"].dtype
-    new_cache = {"length": jnp.full((B,), S, jnp.int32)}
+    if true_lengths is None:
+        new_cache = {"length": jnp.full((B,), S, jnp.int32)}
+    else:
+        new_cache = {"length": true_lengths.astype(jnp.int32)}
     if kv_dt == jnp.int8:
         kq, kscale = quantize_kv(ks)
         vq, vscale = quantize_kv(vs)
@@ -240,8 +260,133 @@ def prefill(cfg: TransformerConfig, params: dict, tokens: jax.Array,
         new_cache["v"] = jax.lax.dynamic_update_slice(
             cache["v"], vs.astype(kv_dt), (0, 0, 0, 0, 0))
     x = rms_norm(x, params["ln_f"], cfg.norm_eps)
-    logits = x[:, -1:] @ params["lm_head"]
+    if true_lengths is None:
+        logits = x[:, -1:] @ params["lm_head"]
+    else:
+        last = x[jnp.arange(B), true_lengths - 1][:, None]
+        logits = last @ params["lm_head"]
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV serving (block-pool cache; see repro.serving.kv)
+# ---------------------------------------------------------------------------
+
+def init_paged_pool(cfg: TransformerConfig, num_pages: int, page_size: int,
+                    kv_dtype: Any = None) -> dict:
+    """Global page-pool arrays for the paged serving path.  Page 0 is the
+    TRASH page (pad-token writes land there; never mapped to a slot)."""
+    kv_dtype = kv_dtype or cfg.dtype
+    L, Kv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.dh
+    pool = {
+        "k": jnp.zeros((L, num_pages, page_size, Kv, Dh), kv_dtype),
+        "v": jnp.zeros((L, num_pages, page_size, Kv, Dh), kv_dtype),
+    }
+    if kv_dtype == jnp.int8:
+        pool["k_scale"] = jnp.zeros((L, num_pages, page_size, Kv),
+                                    jnp.float32)
+        pool["v_scale"] = jnp.zeros((L, num_pages, page_size, Kv),
+                                    jnp.float32)
+    return pool
+
+
+def paged_step(cfg: TransformerConfig, params: dict, tokens: jax.Array,
+               pool: dict, page_table: jax.Array, lengths: jax.Array,
+               counts: jax.Array):
+    """One paged serving step: scatter T new tokens' K/V into the pool and
+    attend against each slot's paged history.
+
+    tokens: (B, T) — T > 1 is a chunked-prefill call, T == 1 a decode
+    tick; counts: (B,) valid tokens per row (<= T; rows with count 0 are
+    idle slots riding the SPMD step).  page_table: (B, max_pages_view)
+    physical page ids — the engine passes a power-of-two SLICE of the full
+    table covering the longest active slot, so gather/attention cost
+    scales with actual lengths, not max_len.  lengths: (B,) tokens cached
+    before this call.  Pad/idle writes are routed to trash page 0.
+
+    Returns (logits (B, T, vocab), pool', lengths + counts)."""
+    x = params["embed"][tokens]
+    B, T, _ = x.shape
+    page = pool["k"].shape[2]
+    MP = page_table.shape[1]
+    positions = lengths[:, None] + jnp.arange(T)[None, :]      # (B, T)
+    valid = jnp.arange(T)[None, :] < counts[:, None]
+    lp_idx = jnp.clip(positions // page, 0, MP - 1)
+    phys = jnp.where(valid,
+                     jnp.take_along_axis(page_table, lp_idx, axis=1), 0)
+    off = positions % page
+    quantized = "k_scale" in pool
+    # the Pallas kernel path is decode-only; chunked prefill stays on the
+    # gather path (its q block is the whole chunk, a different schedule)
+    impl = cfg.attn_impl if T == 1 else "xla"
+
+    def replicate(x):
+        # Pin per-token tensors REPLICATED whenever a mesh is ambient.
+        # With a head-dim-sharded pool, letting GSPMD propagate the
+        # scatter operand's sharding back INTO the rope/qk-norm subgraph
+        # miscompiles on the 0.4.37 CPU partitioner (measured: q off by
+        # >2x, written pages doubled — rope's split/concat on the sharded
+        # Dh axis feeding a scatter is the trigger).  Serving tokens are
+        # a few KB, so replicating them is free; the POOL stays sharded
+        # and the gather/attention path handles it exactly.  No-op
+        # outside a mesh context.
+        mesh = compat.get_abstract_mesh()
+        if mesh is None or getattr(mesh, "empty", False):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*([None] * x.ndim)))
+
+    def write(pages, new):
+        # (P, page, ...) scattered at per-token (phys, off) pairs; rows of
+        # one slot never collide (consecutive positions), distinct slots
+        # own distinct pages, and all invalid tokens land on trash page 0.
+        return pages.at[phys, off].set(new.astype(pages.dtype))
+
+    def body(x, inp):
+        if quantized:
+            lp, kc, vc, ksc, vsc = inp
+        else:
+            lp, kc, vc = inp
+            ksc = vsc = None
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(cfg, lp, h, positions)
+        q, k, v = replicate(q), replicate(k), replicate(v)
+        if quantized:
+            kq, ks_ = quantize_kv(k)
+            vq, vs_ = quantize_kv(v)
+            kc, vc = write(kc, kq), write(vc, vq)
+            ksc, vsc = write(ksc, ks_), write(vsc, vs_)
+            o = paged_decode_attention(q, kc, vc, page_table, lengths,
+                                       ksc, vsc, impl=impl)
+            out_pool = (kc, vc, ksc, vsc)
+        else:
+            kc, vc = write(kc, k), write(vc, v)
+            o = paged_decode_attention(q, kc, vc, page_table, lengths,
+                                       impl=impl)
+            out_pool = (kc, vc)
+        x = x + replicate(o).reshape(B, T, -1) @ lp["wo"]
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe:
+            mo, _ = moe_layer(h, lp, cfg.moe)
+        else:
+            mo = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+        # the residual carry stays replicated too: serving activations are
+        # small, and this keeps GSPMD from threading pool-derived layouts
+        # through the layer scan
+        return replicate(x + mo), out_pool
+
+    if quantized:
+        xs = (params["layers"], pool["k"], pool["v"], pool["k_scale"],
+              pool["v_scale"])
+        x, (ks, vs, kss, vss) = jax.lax.scan(body, x, xs)
+        new_pool = {"k": ks, "v": vs, "k_scale": kss, "v_scale": vss}
+    else:
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], pool["k"],
+                                             pool["v"]))
+        new_pool = {"k": ks, "v": vs}
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["lm_head"]
+    return logits, new_pool, lengths + counts
 
 
 def decode_step(cfg: TransformerConfig, params: dict, tokens: jax.Array,

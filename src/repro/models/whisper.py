@@ -17,6 +17,10 @@ import jax.numpy as jnp
 from .layers import (attention, decode_attention, gather_seq, gelu_mlp,
                      layer_norm, shard_seq)
 
+# Pooled-serving slot layout (see serving/engine.py _write_slot): batch axis
+# of every cache entry, including the encoder cross-attention K/V.
+CACHE_BATCH_AXES = {"k": 1, "v": 1, "xk": 1, "xv": 1, "length": 0}
+
 
 @dataclasses.dataclass(frozen=True)
 class WhisperConfig:

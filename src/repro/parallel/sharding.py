@@ -122,6 +122,28 @@ def cache_specs(mesh: Mesh, *, kv_heads: int, head_dim: int,
     return {"k": kv, "v": kv, "length": P(d)}
 
 
+def paged_pool_specs(mesh: Mesh, *, kv_heads: int, head_dim: int) -> dict[str, P]:
+    """Paged KV pool shardings (serving/kv.py block pool).
+
+    Pool pages (L, P, page, Hkv, Dh) have no batch axis — the PAGE axis is
+    the global one (any slot's table may point anywhere), so it shards over
+    the data axes like the dense cache's batch does, while head structure
+    follows the dense-cache rule: kv heads on `model` when divisible, else
+    head_dim on `model` when divisible.  Page tables and lengths are tiny
+    host-managed index state and stay replicated."""
+    m = _model_axis(mesh)
+    d = _data_axes(mesh)
+    if kv_heads % mesh.shape[m] == 0:
+        pages = P(None, d, None, m, None)
+        scales = P(None, d, None, m)
+    else:
+        feat = m if head_dim % mesh.shape[m] == 0 else None
+        pages = P(None, d, None, None, feat)
+        scales = P(None, d, None, None)
+    return {"k": pages, "v": pages, "k_scale": scales, "v_scale": scales,
+            "page_table": P(None, None), "lengths": P(None)}
+
+
 def make_shardings(tree_of_specs: Any, mesh: Mesh) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),

@@ -70,6 +70,15 @@ Shim inventory (new spelling -> introduced -> old fallback):
       rescale the Blocked dims' block indices by their block sizes.
       Semantics are identical; only the index arithmetic moves.
 
+``prefetch_scalar_grid_spec(...)``
+    TPU scalar-prefetch grid spec (index maps may read prefetched scalar
+    refs — how the paged-attention kernel chases its page table).  The
+    class has lived at ``pltpu.PrefetchScalarGridSpec`` across the whole
+    supported range but is resolved lazily here (no eager
+    ``pallas.tpu`` import for sim-only entry points) and probed at both
+    its TPU-module and core-pallas homes so a future relocation lands in
+    one place.
+
 ``tpu_compiler_params(**kwargs)``
     ``pltpu.CompilerParams`` (renamed ~0.6/0.7) vs ``TPUCompilerParams``
     (0.4.x–0.5.x).  Returns a ``{"compiler_params": ...}`` kwargs dict
@@ -109,7 +118,8 @@ __all__ = [
     "JAX_VERSION",
     "make_mesh", "set_mesh", "get_abstract_mesh", "shard_map",
     "pcast", "vma", "match_vma",
-    "Element", "element_block_spec", "tpu_compiler_params",
+    "Element", "element_block_spec", "prefetch_scalar_grid_spec",
+    "tpu_compiler_params",
     "cost_analysis",
     "tree_map", "tree_leaves", "tree_flatten", "tree_unflatten",
     "random_key",
@@ -260,6 +270,30 @@ def element_block_spec(block_shape: Sequence[int],
 
     return pl.BlockSpec(sizes, as_element_offsets,
                         indexing_mode=pl.Unblocked())
+
+
+# ---------------------------------------------------------------------------
+# Pallas: scalar-prefetch grid specs
+# ---------------------------------------------------------------------------
+
+def prefetch_scalar_grid_spec(*, num_scalar_prefetch: int, grid,
+                              in_specs, out_specs, scratch_shapes=()):
+    """Grid spec whose first ``num_scalar_prefetch`` operands are scalar
+    arrays prefetched before the kernel runs and passed to every index map
+    (trailing arguments) and to the kernel body (leading refs).  This is
+    the mechanism behind page-table indirection in the paged-attention
+    kernel.  Resolved lazily; probed in both ``pallas.tpu`` and core
+    ``pallas`` so a relocation upstream is a one-line fix here."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = (getattr(pltpu, "PrefetchScalarGridSpec", None)
+           or getattr(_pallas(), "PrefetchScalarGridSpec", None))
+    if cls is None:  # pragma: no cover - no release in range lacks it
+        raise NotImplementedError(
+            "PrefetchScalarGridSpec not found in this JAX; the paged "
+            "attention kernel needs scalar prefetch")
+    return cls(num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+               in_specs=in_specs, out_specs=out_specs,
+               scratch_shapes=scratch_shapes)
 
 
 # ---------------------------------------------------------------------------

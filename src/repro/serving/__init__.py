@@ -1,3 +1,9 @@
-from .engine import ServeConfig, ServingEngine
+from .engine import KV_MODES, ServeConfig, ServingEngine
+from .kv import BlockPoolKV, PagedKVConfig
+from .scheduler import (Phase, PhaseScheduler, PrefillJob, Request,
+                        SchedulerConfig)
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["KV_MODES", "ServeConfig", "ServingEngine",
+           "BlockPoolKV", "PagedKVConfig",
+           "Phase", "PhaseScheduler", "PrefillJob", "Request",
+           "SchedulerConfig"]

@@ -1,21 +1,47 @@
-"""Batched serving engine: slot-based continuous batching.
+"""Serving engine: continuous batching over a dense OR paged KV cache.
 
-A fixed pool of `batch` slots; requests occupy a slot, prefill fills its
-cache region, decode steps run for the WHOLE pool every tick (SPMD-friendly:
-one jitted decode_step regardless of occupancy), finished slots are recycled
-for queued requests. Greedy sampling (temperature hook provided).
+Two KV modes behind one interface (``ServeConfig.kv_mode``):
 
-Caches and decode_step shardings follow repro.parallel.sharding — the
+``dense``
+    The seed path, kept for tests and as the benchmark baseline: a fixed
+    pool of ``batch`` slots, each reserving ``max_len`` KV up front;
+    decode ticks run the whole pool (one jitted SPMD step regardless of
+    occupancy).  Two seed inefficiencies are fixed here: prefill is JITTED
+    with length-BUCKETED padding (power-of-two buckets + ``true_lengths``,
+    so repeated admissions hit a handful of traces instead of retracing
+    per prompt length), and the single-slot prefill cache template is
+    allocated ONCE instead of per admission.  Slot writes are driven by
+    the bundle's declared per-entry batch axes (``cache_batch_axes``)
+    instead of a hardwired (L, B, ...) assumption.
+
+``paged`` / ``paged_int8``
+    The block-pool path: K/V live in fixed-size pages allocated from a
+    global pool (``serving.kv.BlockPoolKV``), a phase-aware scheduler
+    (``serving.scheduler.PhaseScheduler``) disaggregates chunked prefill
+    from decode and preempts by page pressure, and every device step is
+    one jitted ``paged_step`` whose page-table view is sliced to a
+    power-of-two page bucket covering the longest ACTIVE slot — compute
+    and resident KV bytes scale with real sequence lengths, not
+    ``batch x max_len``.  ``paged_int8`` keeps the pool quantized with
+    per-(token, head) scale tables.
+
+Greedy sampling (temperature hook provided).  Caches and steps follow
+``repro.parallel.sharding`` (``paged_pool_specs`` for the pool); the
 engine itself is host-side control logic and is exercised on CPU in tests.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from .kv import BlockPoolKV, PagedKVConfig
+from .scheduler import Phase, PhaseScheduler, Request, SchedulerConfig
+
+KV_MODES = ("dense", "paged", "paged_int8")
 
 
 @dataclasses.dataclass
@@ -25,6 +51,12 @@ class ServeConfig:
     max_new_tokens: int = 32
     eos_id: int = -1        # -1: never stop early
     temperature: float = 0.0
+    kv_mode: str = "dense"          # dense | paged | paged_int8
+    page_size: int = 16             # paged: tokens per page
+    num_pages: int | None = None    # paged: pool size (None = dense capacity)
+    prefill_chunk: int = 32         # paged: tokens per prefill call
+    prefill_token_budget: int = 64  # paged: prefill tokens per tick
+    min_prefill_bucket: int = 8     # dense: smallest padded prompt bucket
 
 
 @dataclasses.dataclass
@@ -34,39 +66,122 @@ class _Slot:
     remaining: int = 0
 
 
+def _pow2_at_least(n: int, lo: int = 1) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
 class ServingEngine:
     """bundle must provide: init_cache(batch, max_len), prefill(params,
-    tokens, cache, **extras), decode_step(params, tokens, cache)."""
+    tokens, cache, **extras), decode_step(params, tokens, cache); the paged
+    modes additionally need init_paged_pool / paged_step /
+    supports_paged_kv (the transformer family; see configs/base.py)."""
 
-    def __init__(self, bundle: Any, params: Any, cfg: ServeConfig):
+    def __init__(self, bundle: Any, params: Any, cfg: ServeConfig,
+                 mesh: Any = None):
+        if cfg.kv_mode not in KV_MODES:
+            raise ValueError(f"kv_mode {cfg.kv_mode!r} not in {KV_MODES}")
         self.bundle = bundle
         self.params = params
         self.cfg = cfg
-        self.slots = [_Slot() for _ in range(cfg.batch)]
-        self.queue: list[tuple[int, np.ndarray]] = []
+        self.mesh = mesh               # concrete Mesh: shard the page pool
         self.results: dict[int, list[int]] = {}
         self._next_id = 0
-        self._decode = jax.jit(bundle.decode_step)
+        if cfg.kv_mode == "dense":
+            self._init_dense()
+        else:
+            self._init_paged()
 
-    def submit(self, prompt_tokens: np.ndarray) -> int:
+    # ------------------------------------------------------------------
+    # intake
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt_tokens: np.ndarray, priority: int = 0) -> int:
+        """Queue a request.  ``priority`` (larger = more urgent) drives
+        paged admission/preemption; the dense path keeps seed FIFO."""
         rid = self._next_id
         self._next_id += 1
-        self.queue.append((rid, prompt_tokens))
+        prompt = np.asarray(prompt_tokens, np.int32)
+        total = len(prompt) + self.cfg.max_new_tokens
+        if total > self.cfg.max_len:
+            # dense would silently clamp cache writes at max_len-1 and
+            # corrupt tokens; paged could deadlock admission — reject both
+            raise ValueError(f"request {rid}: prompt+max_new {total} "
+                             f"exceeds max_len {self.cfg.max_len}")
+        if self.cfg.kv_mode == "dense":
+            self.queue.append((rid, prompt, priority))
+            return rid
+        need = self.kv.pages_for(total) + 1     # +1 decode headroom
+        if need > self.kv.cfg.total_pages - 1:
+            raise ValueError(f"request {rid}: needs {need} pages, pool has "
+                             f"{self.kv.cfg.total_pages - 1}")
+        req = Request(rid=rid, prompt=prompt, priority=priority,
+                      arrival=rid, max_new_tokens=self.cfg.max_new_tokens)
+        self._requests[rid] = req
+        self.sched.submit(req)
         return rid
+
+    def run(self, cache=None) -> dict[int, list[int]]:
+        """Drain every queued/active request to completion."""
+        if self.cfg.kv_mode == "dense":
+            return self._run_dense(cache)
+        return self._run_paged()
+
+    # ------------------------------------------------------------------
+    # dense path (seed behaviour + bucketed-jit prefill + declared axes)
+    # ------------------------------------------------------------------
+
+    def _init_dense(self) -> None:
+        cfg = self.cfg
+        self.slots = [_Slot() for _ in range(cfg.batch)]
+        self.queue: list[tuple[int, np.ndarray, int]] = []
+        self._decode = jax.jit(self.bundle.decode_step)
+        self._cache_axes: dict | None = None
+        self._prefill_template = None       # built lazily, reused forever
+        self._bucketed = bool(getattr(self.bundle,
+                                      "prefill_supports_true_lengths", False))
+        if self._bucketed:
+            self._prefill = jax.jit(
+                lambda p, t, c, tl: self.bundle.prefill(p, t, c,
+                                                        true_lengths=tl))
+        else:
+            # exact-length fallback (families whose caches cannot absorb
+            # padded prompts, e.g. SSM states): still jitted — repeated
+            # admissions of the same prompt length reuse one trace — and
+            # still template-reusing.
+            self._prefill = jax.jit(
+                lambda p, t, c: self.bundle.prefill(p, t, c))
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s.request_id is None]
 
+    def _prompt_bucket(self, n: int) -> int:
+        return min(self.cfg.max_len,
+                   _pow2_at_least(n, self.cfg.min_prefill_bucket))
+
     def _admit(self, cache):
-        """Prefill queued requests into free slots (one batch prefill for
-        simplicity: slots prefill independently via per-slot batch=1)."""
+        """Prefill queued requests into free slots (per-slot batch=1,
+        length-bucketed so admissions reuse a handful of jit traces)."""
         for slot_idx in self._free_slots():
             if not self.queue:
                 break
-            rid, prompt = self.queue.pop(0)
+            rid, prompt, _ = self.queue.pop(0)
+            if self._prefill_template is None:
+                self._prefill_template = self.bundle.init_cache(
+                    1, self.cfg.max_len)
             toks = jnp.asarray(prompt, jnp.int32)[None]
-            c1 = self.bundle.init_cache(1, self.cfg.max_len)
-            logits, c1 = self.bundle.prefill(self.params, toks, c1)
+            S = toks.shape[1]
+            if self._bucketed:
+                Sb = self._prompt_bucket(S)
+                toks = jnp.pad(toks, ((0, 0), (0, Sb - S)))
+                logits, c1 = self._prefill(
+                    self.params, toks, self._prefill_template,
+                    jnp.asarray([S], jnp.int32))
+            else:
+                logits, c1 = self._prefill(self.params, toks,
+                                           self._prefill_template)
             nxt = int(jnp.argmax(logits[0, -1]))
             cache = self._write_slot(cache, c1, slot_idx)
             s = self.slots[slot_idx]
@@ -75,23 +190,30 @@ class ServingEngine:
             s.remaining = self.cfg.max_new_tokens - 1
         return cache
 
-    @staticmethod
-    def _write_slot(cache, one, idx):
-        """Copy a batch=1 cache into slot `idx` of the pooled cache."""
+    def _write_slot(self, cache, one, idx):
+        """Copy a batch=1 cache into slot ``idx`` of the pooled cache.
+
+        The batch axis of each entry comes from the bundle's declared
+        layout (``cache_batch_axes``) — e.g. recurrentgemma's grouped
+        recurrent states carry batch at axis 2 — with the seed's
+        axis-0-for-1D / axis-1-otherwise rule as the fallback for bundles
+        that declare nothing."""
+        if self._cache_axes is None:
+            declare = getattr(self.bundle, "cache_batch_axes", None)
+            if declare is not None:
+                self._cache_axes = dict(declare(cache))
+            else:
+                self._cache_axes = {k: 0 if v.ndim == 1 else 1
+                                    for k, v in cache.items()}
         out = {}
         for k, v in cache.items():
-            s = one[k]
-            if k == "length":
-                out[k] = v.at[idx].set(s[0])
-            else:
-                # pooled (L, B, ...) <- single (L, 1, ...)
-                out[k] = jax.lax.dynamic_update_slice(
-                    v, s.astype(v.dtype),
-                    (0, idx) + (0,) * (v.ndim - 2))
+            ax = self._cache_axes[k]
+            start = (0,) * ax + (idx,) + (0,) * (v.ndim - ax - 1)
+            out[k] = jax.lax.dynamic_update_slice(
+                v, one[k].astype(v.dtype), start)
         return out
 
-    def run(self, cache=None) -> dict[int, list[int]]:
-        """Drain queue + all slots to completion; returns {rid: tokens}."""
+    def _run_dense(self, cache=None) -> dict[int, list[int]]:
         cfg = self.cfg
         if cache is None:
             cache = self.bundle.init_cache(cfg.batch, cfg.max_len)
@@ -115,3 +237,149 @@ class ServingEngine:
                     self.results[s.request_id] = s.generated
                     self.slots[i] = _Slot()
         return self.results
+
+    # ------------------------------------------------------------------
+    # paged path (block pool + phase scheduler)
+    # ------------------------------------------------------------------
+
+    def _init_paged(self) -> None:
+        cfg = self.cfg
+        if not getattr(self.bundle, "supports_paged_kv", False):
+            raise ValueError("bundle does not support the paged KV path "
+                             "(needs init_paged_pool/paged_step)")
+        mcfg = self.bundle.cfg
+        quant = cfg.kv_mode == "paged_int8"
+        kv_dtype = jnp.int8 if quant else None
+        kv_bytes = 1 if quant else jnp.dtype(mcfg.dtype).itemsize
+        pages_per_slot = -(-cfg.max_len // cfg.page_size)
+        num_pages = cfg.num_pages or cfg.batch * pages_per_slot + 1
+        if self.mesh is not None:
+            # the page axis shards over the data axes — round the pool up
+            # so every shard gets whole pages (same axis inventory the
+            # pool specs use, so rounding and sharding can't diverge)
+            from repro.parallel.sharding import _data_axes
+            dsz = 1
+            for a in _data_axes(self.mesh):
+                dsz *= self.mesh.shape[a]
+            num_pages = -(-num_pages // dsz) * dsz
+        self.kv = BlockPoolKV(PagedKVConfig(
+            num_slots=cfg.batch, max_len=cfg.max_len,
+            page_size=cfg.page_size, num_pages=num_pages,
+            n_layers=mcfg.n_layers, kv_heads=mcfg.n_kv_heads,
+            head_dim=mcfg.dh, kv_bytes=kv_bytes, quantize=quant))
+        self.sched = PhaseScheduler(SchedulerConfig(
+            num_slots=cfg.batch, prefill_chunk=cfg.prefill_chunk,
+            prefill_token_budget=cfg.prefill_token_budget))
+        self.pool = self.bundle.init_paged_pool(num_pages, cfg.page_size,
+                                                kv_dtype=kv_dtype)
+        if self.mesh is not None:
+            # pool lives across the mesh: page axis over data, head
+            # structure over model (repro.parallel.sharding)
+            from repro.parallel.sharding import paged_pool_specs
+            specs = paged_pool_specs(self.mesh, kv_heads=mcfg.n_kv_heads,
+                                     head_dim=mcfg.dh)
+            self.pool = {
+                k: jax.device_put(
+                    v, jax.sharding.NamedSharding(self.mesh, specs[k]))
+                for k, v in self.pool.items()}
+        self._requests: dict[int, Request] = {}
+        self._step = jax.jit(self.bundle.paged_step)
+        self.ticks = 0
+
+    def _pages_view(self, max_tokens: int) -> int:
+        """Power-of-two page-table slice covering ``max_tokens`` — the
+        static shape buckets that let gather/attention cost track actual
+        lengths while reusing a log number of jit traces."""
+        per_slot = self.kv.cfg.pages_per_slot
+        return min(per_slot, _pow2_at_least(self.kv.pages_for(max_tokens)))
+
+    def _exec_step(self, tokens: np.ndarray, slots: list[int],
+                   counts: np.ndarray, mp: int):
+        """Run one jitted paged_step over the given slot rows (inside the
+        ambient mesh context when the pool is sharded, so paged_step's
+        sharding constraints resolve)."""
+        from repro.runtime import compat
+        pt = jnp.asarray(self.kv.page_table[slots, :mp])
+        lens = jnp.asarray(self.kv.lengths[slots].astype(np.int32))
+        ctx = compat.set_mesh(self.mesh) if self.mesh is not None else None
+        try:
+            if ctx is not None:
+                ctx.__enter__()
+            logits, self.pool, _ = self._step(
+                self.params, jnp.asarray(tokens), self.pool, pt, lens,
+                jnp.asarray(counts, jnp.int32))
+        finally:
+            if ctx is not None:
+                ctx.__exit__(None, None, None)
+        return logits
+
+    def _finish(self, req: Request) -> None:
+        self.results[req.rid] = req.output
+        self.sched.finish(self.kv, req)
+
+    def _run_paged(self) -> dict[int, list[int]]:
+        cfg = self.cfg
+        max_ticks = 64 + 4 * sum(r.total_len for r in
+                                 self._requests.values())
+        while self.sched.has_work:
+            self.ticks += 1
+            if self.ticks > max_ticks:     # safety valve: scheduler bug
+                raise RuntimeError("paged scheduler made no progress")
+            self.sched.admit(self.kv)
+
+            # --- prefill phase: budgeted chunks -----------------------
+            for job in self.sched.prefill_jobs():
+                req, n = job.req, job.count
+                chunk = cfg.prefill_chunk
+                toks = np.zeros((1, chunk), np.int32)
+                toks[0, :n] = req.prompt[job.start:job.start + n]
+                mp = self._pages_view(int(self.kv.lengths[req.slot]) + chunk)
+                logits = self._exec_step(toks, [req.slot],
+                                         np.asarray([n]), mp)
+                self.kv.advance(req.slot, n)
+                self.sched.finish_prefill_chunk(req, n)
+                if req.phase is Phase.DECODE:
+                    nxt = int(jnp.argmax(logits[0, n - 1]))
+                    req.generated.append(nxt)
+                    if req.n_generated >= req.max_new_tokens or \
+                            nxt == cfg.eos_id:
+                        self._finish(req)
+
+            # --- decode phase: one tick for the whole pool ------------
+            if not self.sched.decoding():
+                continue
+            self.sched.ensure_decode_pages(self.kv)  # may evict under
+            decoding = self.sched.decoding()         # page pressure
+            if not decoding:
+                continue
+            B = cfg.batch
+            last = np.zeros((B, 1), np.int32)
+            counts = np.zeros((B,), np.int32)
+            for req in decoding:
+                last[req.slot, 0] = req.generated[-1]
+                counts[req.slot] = 1
+            mp = self._pages_view(
+                max(int(self.kv.lengths[r.slot]) + 1 for r in decoding))
+            logits = self._exec_step(last, list(range(B)), counts, mp)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            for req in decoding:
+                self.kv.advance(req.slot, 1)
+                tok = int(nxt[req.slot])
+                req.generated.append(tok)
+                if req.n_generated >= req.max_new_tokens or \
+                        tok == cfg.eos_id:
+                    self._finish(req)
+        return self.results
+
+    def kv_stats(self) -> dict:
+        """Resident-KV accounting (benchmarks): paged modes report pool
+        counters; dense reports the up-front reservation."""
+        if self.cfg.kv_mode != "dense":
+            return self.kv.stats()
+        leaves = jax.tree_util.tree_leaves(
+            jax.eval_shape(lambda: self.bundle.init_cache(
+                self.cfg.batch, self.cfg.max_len)))
+        total = int(sum(np.prod(l.shape) * l.dtype.itemsize for l in leaves))
+        return {"bytes_resident": total, "peak_bytes": total,
+                "pages_total": 0, "pages_used": 0, "utilization": 1.0,
+                "fragmentation": 0.0, "evictions": 0}

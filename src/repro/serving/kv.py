@@ -1,0 +1,209 @@
+"""Block-pool KV manager: fixed-size pages + per-slot page tables.
+
+The serving analogue of the paper's exchange mesh: a slot's KV history is
+broken into fixed-size PAGES (the local SRAM tiles) allocated from one
+GLOBAL pool, and the per-slot page table is the exchange fabric that makes
+any page globally addressable — no slot ever reserves ``max_len`` tokens of
+dense KV up front, so resident bytes track the tokens actually cached.
+
+This module is deliberately jax-free: the page table, free list and
+counters are host-side numpy/python state (cheap, synchronous, property-
+testable), while the page POOL arrays themselves (``k_pages``/``v_pages``
+per layer) are device arrays owned by the engine and indexed by the table
+this manager maintains.  Physical page 0 is reserved as the TRASH page:
+pad-token writes land there and no slot is ever mapped to it, so masked
+scatters never corrupt live history.
+
+Pool sizing/accounting knows the per-page byte cost (layers x page_size x
+kv_heads x head_dim x dtype, doubled for K+V, plus f32 scale tables when
+the pool is int8-quantized) so ``bytes_resident()`` reports the real HBM
+footprint of the cached tokens.  Shardings for the device-side pool follow
+``repro.parallel.sharding.paged_pool_specs``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    """Geometry of one paged pool (shared across every slot)."""
+    num_slots: int                 # decode pool width (continuous batching)
+    max_len: int                   # per-slot token capacity ceiling
+    page_size: int = 16            # tokens per page
+    num_pages: int | None = None   # total pool pages incl. trash page 0
+    n_layers: int = 1              # byte accounting only
+    kv_heads: int = 1
+    head_dim: int = 1
+    kv_bytes: int = 2              # bf16 = 2; int8 pools pass 1
+    quantize: bool = False         # adds f32 scale tables to accounting
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.max_len // self.page_size)
+
+    @property
+    def total_pages(self) -> int:
+        if self.num_pages is not None:
+            return self.num_pages
+        # default: full reservation + trash (degenerates to dense capacity)
+        return self.num_slots * self.pages_per_slot + 1
+
+    @property
+    def page_bytes(self) -> int:
+        """HBM bytes one resident page costs (K + V, + scales when int8)."""
+        elems = self.n_layers * self.page_size * self.kv_heads
+        b = 2 * elems * self.head_dim * self.kv_bytes
+        if self.quantize:
+            b += 2 * elems * 4          # f32 scale per (token, head)
+        return b
+
+
+class BlockPoolKV:
+    """Free-list page allocator with per-slot page tables.
+
+    Invariants (property-tested in tests/test_serving.py):
+      * a physical page is mapped by at most one slot at any time;
+      * page 0 (trash) is never allocated;
+      * free + sum(per-slot pages) == total_pages - 1 always.
+    """
+
+    TRASH = 0
+
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        n = cfg.total_pages
+        if n < 2:
+            raise ValueError("pool needs at least one page beyond trash")
+        # LIFO free list: recently freed pages are re-used first (keeps the
+        # hot working set dense in the pool — the fragmentation counter
+        # below measures how well that works).
+        self._free: list[int] = list(range(n - 1, 0, -1))
+        self._slot_pages: list[list[int]] = [[] for _ in range(cfg.num_slots)]
+        self.lengths = np.zeros((cfg.num_slots,), np.int64)
+        self.page_table = np.zeros((cfg.num_slots, cfg.pages_per_slot),
+                                   np.int32)
+        # counters
+        self.alloc_count = 0
+        self.free_count = 0
+        self.evict_count = 0
+        self.peak_pages = 0
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.cfg.total_pages - 1) - len(self._free)
+
+    def slot_pages(self, slot: int) -> tuple[int, ...]:
+        return tuple(self._slot_pages[slot])
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.cfg.page_size)
+
+    def can_alloc(self, n_pages: int) -> bool:
+        return n_pages <= len(self._free)
+
+    def capacity(self, slot: int) -> int:
+        """Token capacity currently mapped for ``slot``."""
+        return len(self._slot_pages[slot]) * self.cfg.page_size
+
+    # -- mutation -----------------------------------------------------------
+
+    def ensure(self, slot: int, target_len: int) -> int:
+        """Map enough pages for ``target_len`` tokens; returns pages added.
+
+        Raises ``MemoryError`` when the free list can't cover the growth —
+        the scheduler turns that into an eviction decision."""
+        if target_len > self.cfg.max_len:
+            raise ValueError(f"target_len {target_len} > max_len "
+                             f"{self.cfg.max_len}")
+        need = self.pages_for(target_len) - len(self._slot_pages[slot])
+        if need <= 0:
+            return 0
+        if need > len(self._free):
+            raise MemoryError(
+                f"pool dry: slot {slot} needs {need} pages, "
+                f"{len(self._free)} free")
+        added = 0
+        for _ in range(need):
+            page = self._free.pop()
+            idx = len(self._slot_pages[slot])
+            self._slot_pages[slot].append(page)
+            self.page_table[slot, idx] = page
+            added += 1
+        self.alloc_count += added
+        self.peak_pages = max(self.peak_pages, self.used_pages)
+        return added
+
+    def advance(self, slot: int, n_tokens: int) -> None:
+        """Record ``n_tokens`` more tokens resident in ``slot``.
+
+        Capacity must already be mapped (``ensure``)."""
+        new_len = int(self.lengths[slot]) + n_tokens
+        if new_len > self.capacity(slot):
+            raise RuntimeError(
+                f"slot {slot}: length {new_len} exceeds mapped capacity "
+                f"{self.capacity(slot)} — call ensure() first")
+        self.lengths[slot] = new_len
+
+    def free_slot(self, slot: int, *, evicted: bool = False) -> int:
+        """Unmap every page of ``slot`` back to the free list."""
+        pages = self._slot_pages[slot]
+        released = len(pages)
+        self._free.extend(reversed(pages))
+        pages.clear()
+        self.page_table[slot, :] = self.TRASH
+        self.lengths[slot] = 0
+        self.free_count += released
+        if evicted:
+            self.evict_count += 1
+        return released
+
+    # -- accounting ---------------------------------------------------------
+
+    def bytes_resident(self) -> int:
+        return self.used_pages * self.cfg.page_bytes
+
+    def stats(self) -> dict:
+        """Utilization (tokens cached / token capacity mapped) and pool
+        fragmentation (mapped-but-unfilled tail tokens / mapped capacity)."""
+        cap = sum(len(p) for p in self._slot_pages) * self.cfg.page_size
+        toks = int(self.lengths.sum())
+        return {
+            "pages_total": self.cfg.total_pages - 1,
+            "pages_used": self.used_pages,
+            "pages_free": self.free_pages,
+            "peak_pages": self.peak_pages,
+            "tokens_resident": toks,
+            "bytes_resident": self.bytes_resident(),
+            "peak_bytes": self.peak_pages * self.cfg.page_bytes,
+            "utilization": toks / cap if cap else 0.0,
+            "fragmentation": (cap - toks) / cap if cap else 0.0,
+            "allocs": self.alloc_count,
+            "frees": self.free_count,
+            "evictions": self.evict_count,
+        }
+
+    def check_invariants(self) -> None:
+        """Cheap structural audit (used by the property tests)."""
+        seen: set[int] = set()
+        for slot, pages in enumerate(self._slot_pages):
+            for i, p in enumerate(pages):
+                assert p != self.TRASH, f"slot {slot} mapped to trash"
+                assert p not in seen, f"page {p} double-assigned"
+                assert self.page_table[slot, i] == p
+                seen.add(p)
+            assert (self.page_table[slot, len(pages):] == self.TRASH).all()
+            assert self.lengths[slot] <= len(pages) * self.cfg.page_size
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list duplicates"
+        assert not (free & seen), "page both free and mapped"
+        assert self.TRASH not in free, "trash page entered the free list"
+        assert len(free) + len(seen) == self.cfg.total_pages - 1

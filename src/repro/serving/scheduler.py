@@ -1,0 +1,233 @@
+"""Phase-aware request scheduler: prefill/decode disaggregation + priority
+admission + preemption by page pressure.
+
+Replaces the seed engine's FIFO slot round-robin with three explicit
+phases per request:
+
+  WAITING  -> admission by (priority desc, arrival asc); a request is only
+              admitted when a slot is free AND the block pool can map its
+              whole prompt (plus one decode page of headroom).
+  PREFILL  -> the prompt is consumed in fixed-size CHUNKS, budgeted per
+              tick (``prefill_token_budget``), so one long prompt cannot
+              starve the decode pool — the serving analogue of
+              prefill/decode disaggregation.  Chunks of different requests
+              interleave across ticks.
+  DECODE   -> the whole slot pool advances one token per tick (one jitted
+              SPMD step regardless of occupancy, as before).
+
+Preemption: when the pool runs dry — either a high-priority arrival can't
+be admitted or a decoding slot needs its next page — the LOWEST-priority
+active request is evicted: its pages return to the free list and the
+request re-enters WAITING with its generated tokens folded into the prompt
+(vLLM-style recompute on re-admission).  Eviction never targets ANOTHER
+request with priority >= the one that needs the pages; when no strictly
+lower-priority victim exists, a decoding slot that cannot grow evicts
+ITSELF (equal-priority peers keep their progress).
+
+The scheduler is host-side control logic over :class:`~repro.serving.kv.
+BlockPoolKV` — no jax imports — so policies are unit-testable in
+microseconds.  The engine executes the plans it returns.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+
+import numpy as np
+
+from .kv import BlockPoolKV
+
+
+class Phase(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # int32 tokens, may grow on eviction
+    priority: int = 0                  # larger = more urgent
+    arrival: int = 0                   # submit order (FIFO tie-break)
+    phase: Phase = Phase.WAITING
+    slot: int = -1
+    prefill_pos: int = 0               # tokens of prompt already cached
+    generated: list[int] = dataclasses.field(default_factory=list)
+    history: list[int] = dataclasses.field(default_factory=list)
+    # ^ tokens generated before a preemption (folded into the prompt for
+    #   recompute; still part of the request's output)
+    max_new_tokens: int = 0
+    preemptions: int = 0
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.history) + len(self.generated)
+
+    @property
+    def output(self) -> list[int]:
+        return self.history + self.generated
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt) + self.max_new_tokens - len(self.history)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    num_slots: int
+    prefill_chunk: int = 32            # tokens per prefill call
+    prefill_token_budget: int = 64     # prefill tokens per tick, all reqs
+    decode_headroom_pages: int = 1     # reserved beyond the prompt at admit
+
+
+@dataclasses.dataclass
+class PrefillJob:
+    req: Request
+    start: int                         # chunk start within req.prompt
+    count: int                         # valid tokens in this chunk
+
+
+class PhaseScheduler:
+    """Owns the request lifecycle; the engine owns the device arrays."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self._waiting: list[tuple[int, int, Request]] = []   # priority heap
+        self._active: dict[int, Request] = {}                # slot -> req
+        self._tie = itertools.count()
+
+    # -- intake -------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.phase = Phase.WAITING
+        heapq.heappush(self._waiting, (-req.priority, next(self._tie), req))
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._waiting or self._active)
+
+    def active(self) -> list[Request]:
+        return list(self._active.values())
+
+    def decoding(self) -> list[Request]:
+        return [r for r in self._active.values() if r.phase is Phase.DECODE]
+
+    # -- admission + preemption ---------------------------------------------
+
+    def _evictable_below(self, priority: int) -> Request | None:
+        """Lowest-priority active request strictly below ``priority``
+        (latest arrival breaks ties — it has the least sunk work)."""
+        cands = [r for r in self._active.values() if r.priority < priority]
+        if not cands:
+            return None
+        return min(cands, key=lambda r: (r.priority, -r.arrival))
+
+    def _evict(self, kv: BlockPoolKV, req: Request) -> None:
+        kv.free_slot(req.slot, evicted=True)
+        del self._active[req.slot]
+        # recompute-on-readmission: generated tokens become prompt suffix
+        if req.generated:
+            req.prompt = np.concatenate(
+                [req.prompt,
+                 np.asarray(req.generated, req.prompt.dtype)])
+            req.history.extend(req.generated)
+            req.generated = []
+        req.slot = -1
+        req.prefill_pos = 0
+        req.preemptions += 1
+        self.submit(req)
+
+    def admit(self, kv: BlockPoolKV) -> list[Request]:
+        """Admit waiting requests in priority order; may evict lower-
+        priority active requests when the pool is the binding constraint.
+        Returns the newly admitted requests (now in PREFILL phase)."""
+        admitted = []
+        while self._waiting:
+            _, _, req = self._waiting[0]
+            need = kv.pages_for(len(req.prompt)) + \
+                self.cfg.decode_headroom_pages
+            # page pressure: evict strictly-lower-priority work first
+            while (not kv.can_alloc(need)) or \
+                    (len(self._active) >= self.cfg.num_slots):
+                victim = self._evictable_below(req.priority)
+                if victim is None:
+                    break
+                self._evict(kv, victim)
+            if not kv.can_alloc(need) or \
+                    len(self._active) >= self.cfg.num_slots:
+                break
+            heapq.heappop(self._waiting)
+            slot = next(i for i in range(self.cfg.num_slots)
+                        if i not in self._active)
+            kv.ensure(slot, len(req.prompt) +
+                      self.cfg.decode_headroom_pages * kv.cfg.page_size)
+            req.slot = slot
+            req.phase = Phase.PREFILL
+            req.prefill_pos = 0
+            self._active[slot] = req
+            admitted.append(req)
+        return admitted
+
+    # -- prefill phase ------------------------------------------------------
+
+    def prefill_jobs(self) -> list[PrefillJob]:
+        """This tick's chunked prefill work, oldest-admission first, capped
+        by the token budget.  One chunk per request per tick keeps a long
+        prompt from monopolizing the budget."""
+        jobs, budget = [], self.cfg.prefill_token_budget
+        for req in sorted((r for r in self._active.values()
+                           if r.phase is Phase.PREFILL),
+                          key=lambda r: r.arrival):
+            if budget <= 0:
+                break
+            count = min(self.cfg.prefill_chunk,
+                        len(req.prompt) - req.prefill_pos, budget)
+            if count <= 0:
+                continue
+            jobs.append(PrefillJob(req=req, start=req.prefill_pos,
+                                   count=count))
+            budget -= count
+        return jobs
+
+    def finish_prefill_chunk(self, req: Request, count: int) -> None:
+        req.prefill_pos += count
+        if req.prefill_pos >= len(req.prompt):
+            req.phase = Phase.DECODE
+
+    # -- decode phase -------------------------------------------------------
+
+    def ensure_decode_pages(self, kv: BlockPoolKV) -> list[Request]:
+        """Map the next page for every decoding slot about to cross a page
+        boundary; evicts lowest-priority work under page pressure (the
+        needy slot itself evicts when IT is the lowest).  Returns evicted
+        requests."""
+        evicted = []
+        for req in sorted(self.decoding(),
+                          key=lambda r: (-r.priority, r.arrival)):
+            if req.slot not in self._active:      # already evicted this tick
+                continue
+            target = int(kv.lengths[req.slot]) + 1
+            while True:
+                try:
+                    kv.ensure(req.slot, target)
+                    break
+                except MemoryError:
+                    # strictly-lower-priority work goes first; when none
+                    # exists the needy slot evicts ITSELF (equal-priority
+                    # peers are never targeted, per the admission contract)
+                    victim = self._evictable_below(req.priority) or req
+                    self._evict(kv, victim)
+                    evicted.append(victim)
+                    if victim is req:
+                        break
+        return evicted
+
+    def finish(self, kv: BlockPoolKV, req: Request) -> None:
+        kv.free_slot(req.slot)
+        del self._active[req.slot]
+        req.phase = Phase.FINISHED
+        req.slot = -1

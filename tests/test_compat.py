@@ -141,6 +141,34 @@ def test_compiler_params_unknown_kwarg_degrades():
 
 
 # ---------------------------------------------------------------------------
+# Scalar-prefetch grid spec (paged-attention page-table indirection)
+# ---------------------------------------------------------------------------
+
+def test_prefetch_scalar_grid_spec_gathers_by_table():
+    """Index maps must see the prefetched scalar ref: a 2-page gather
+    driven by a page table, in interpret mode."""
+    from jax.experimental import pallas as pl
+
+    def kern(pt_ref, x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    table = jnp.asarray([2, 0], jnp.int32)
+    x = jnp.arange(4 * 8, dtype=jnp.float32).reshape(4, 8)
+    spec = compat.prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(2,),
+        in_specs=[pl.BlockSpec((1, 8), lambda i, pt_ref: (pt_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, 8), lambda i, pt_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=spec,
+        out_shape=jax.ShapeDtypeStruct((2, 8), jnp.float32),
+        interpret=True)(table, x)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(x[np.asarray(table)]))
+
+
+# ---------------------------------------------------------------------------
 # cost_analysis normalization
 # ---------------------------------------------------------------------------
 

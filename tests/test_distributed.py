@@ -188,3 +188,32 @@ for a, b in zip(g, g_ref):
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-4)
 print("ring attention ok")
 """)
+
+
+def test_paged_pool_sharded_across_mesh():
+    """The serving block pool lives across the mesh: pool pages carry the
+    paged_pool_specs sharding and the paged engine still emits the same
+    greedy tokens as the single-host dense engine."""
+    _run("""
+import jax, numpy as np
+from repro.runtime import compat
+from repro.launch.serve import build_engine
+
+mesh = compat.make_mesh((2, 4), ("data", "model"))
+prompts = [np.arange(4 + 3 * i, dtype=np.int32) % 96 for i in range(4)]
+
+dense, _ = build_engine("qwen3-4b", slots=2, max_len=48, max_new=4)
+for p in prompts:
+    dense.submit(p)
+ref = dense.run()
+
+paged, _ = build_engine("qwen3-4b", slots=2, max_len=48, max_new=4,
+                        kv_mode="paged", page_size=8, mesh=mesh)
+for p in prompts:
+    paged.submit(p)
+out = paged.run()
+shardings = {k: v.sharding for k, v in paged.pool.items()}
+assert any(s.is_fully_replicated is False for s in shardings.values()), shardings
+assert out == ref, (out, ref)
+print("paged pool sharded ok")
+""")

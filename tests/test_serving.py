@@ -1,0 +1,339 @@
+"""Paged KV serving subsystem: block pool, paged kernel, scheduler, engine.
+
+Covers the acceptance checklist of the paged-serving PR: paged-vs-dense
+decode equivalence, block-pool alloc/free/evict invariants (hypothesis),
+preemption of low-priority work by a high-priority late arrival under page
+pressure, the paged flash-decode kernel against its pure-JAX oracle, and
+the slot-write layout regression (cache entries whose batch axis is NOT
+axis 1)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import (BlockPoolKV, PagedKVConfig, Phase, PhaseScheduler,
+                           Request, SchedulerConfig, ServeConfig,
+                           ServingEngine)
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode kernel vs oracle
+# ---------------------------------------------------------------------------
+
+def _pool_setup(seed=0, B=3, H=8, Hkv=2, Dh=32, P=12, pg=16, MP=4):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(P, pg, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(P, pg, Hkv, Dh)), jnp.float32)
+    pt = jnp.asarray([[1, 2, 3, 0], [4, 5, 0, 0], [6, 7, 8, 9]], jnp.int32)
+    lens = jnp.asarray([40, 17, 64], jnp.int32)
+    return q, k, v, pt, lens
+
+
+def test_paged_kernel_matches_ref():
+    from repro.kernels import ops
+    from repro.kernels.ref import paged_decode_ref
+    q, k, v, pt, lens = _pool_setup()
+    out = ops.paged_flash_decode(q, k, v, pt, lens)
+    ref = paged_decode_ref(q, k, v, pt, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_paged_kernel_int8_matches_ref():
+    from repro.kernels import ops
+    from repro.kernels.ref import paged_decode_ref
+    q, _, _, pt, lens = _pool_setup()
+    rng = np.random.default_rng(1)
+    P, pg, Hkv, Dh = 12, 16, 2, 32
+    kq = jnp.asarray(rng.integers(-127, 127, (P, pg, Hkv, Dh)), jnp.int8)
+    vq = jnp.asarray(rng.integers(-127, 127, (P, pg, Hkv, Dh)), jnp.int8)
+    ks = jnp.asarray(rng.uniform(0.01, 0.02, (P, pg, Hkv)), jnp.float32)
+    vs = jnp.asarray(rng.uniform(0.01, 0.02, (P, pg, Hkv)), jnp.float32)
+    out = ops.paged_flash_decode(q, kq, vq, pt, lens, ks, vs)
+    ref = paged_decode_ref(q, kq, vq, pt, lens, ks, vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+def test_paged_attention_trash_page_isolated():
+    """Pages beyond a slot's length (incl. trash page 0) never leak into
+    the output: doubling garbage in unmapped pages leaves results bitwise
+    identical."""
+    from repro.kernels import ops
+    q, k, v, pt, lens = _pool_setup()
+    out1 = ops.paged_flash_decode(q, k, v, pt, lens)
+    k2 = k.at[0].mul(2.0).at[10, :, :, :].add(7.0)   # trash + unmapped page
+    v2 = v.at[0].mul(-3.0).at[11, :, :, :].add(1.0)
+    out2 = ops.paged_flash_decode(q, k2, v2, pt, lens)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# block pool
+# ---------------------------------------------------------------------------
+
+def _kvcfg(**kw):
+    base = dict(num_slots=4, max_len=64, page_size=8, num_pages=17)
+    base.update(kw)
+    return PagedKVConfig(**base)
+
+
+def test_block_pool_basics():
+    kv = BlockPoolKV(_kvcfg())
+    assert kv.free_pages == 16
+    kv.ensure(0, 20)                       # 3 pages
+    kv.advance(0, 20)
+    assert kv.used_pages == 3 and kv.capacity(0) == 24
+    st = kv.stats()
+    assert st["tokens_resident"] == 20
+    assert st["bytes_resident"] == 3 * kv.cfg.page_bytes
+    assert 0.0 < st["fragmentation"] < 1.0
+    kv.check_invariants()
+    kv.free_slot(0)
+    assert kv.free_pages == 16 and kv.capacity(0) == 0
+    kv.check_invariants()
+
+
+def test_block_pool_dry_raises():
+    kv = BlockPoolKV(_kvcfg(num_pages=4))   # 3 usable
+    kv.ensure(0, 24)
+    with pytest.raises(MemoryError):
+        kv.ensure(1, 8)
+    kv.check_invariants()
+
+
+def test_block_pool_property_random_ops():
+    pytest.importorskip("hypothesis")  # optional (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    ops_strategy = st.lists(
+        st.tuples(st.sampled_from(["ensure", "advance", "free"]),
+                  st.integers(0, 3), st.integers(1, 64)),
+        min_size=1, max_size=60)
+
+    @given(ops=ops_strategy)
+    @settings(max_examples=80, deadline=None)
+    def run(ops):
+        kv = BlockPoolKV(_kvcfg())
+        for op, slot, n in ops:
+            if op == "ensure":
+                try:
+                    kv.ensure(slot, n)
+                except MemoryError:
+                    pass
+            elif op == "advance":
+                room = kv.capacity(slot) - int(kv.lengths[slot])
+                if room > 0:
+                    kv.advance(slot, min(n, room))
+            else:
+                kv.free_slot(slot)
+            # the PR's property: alloc/free/evict never double-assigns a
+            # page, never allocates trash, never leaks
+            kv.check_invariants()
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: phases + preemption
+# ---------------------------------------------------------------------------
+
+def _req(rid, n_prompt, prio, max_new=8):
+    return Request(rid=rid, prompt=np.zeros(n_prompt, np.int32),
+                   priority=prio, arrival=rid, max_new_tokens=max_new)
+
+
+def test_scheduler_high_priority_late_arrival_preempts():
+    """Two low-priority requests hold the whole pool in DECODE; a
+    high-priority arrival evicts the lowest/latest one and is admitted."""
+    kv = BlockPoolKV(_kvcfg(num_slots=2, num_pages=7))   # 6 usable pages
+    sched = PhaseScheduler(SchedulerConfig(num_slots=2))
+    lo0, lo1 = _req(0, 16, prio=0), _req(1, 16, prio=0)
+    sched.submit(lo0)
+    sched.submit(lo1)
+    assert len(sched.admit(kv)) == 2                     # 3 pages each
+    for r in (lo0, lo1):
+        kv.advance(r.slot, 16)
+        r.prefill_pos = 16
+        r.phase = Phase.DECODE
+        r.generated = [7]
+    assert kv.free_pages == 0
+
+    hi = _req(2, 16, prio=5)
+    sched.submit(hi)
+    admitted = sched.admit(kv)
+    assert admitted == [hi] and hi.phase is Phase.PREFILL
+    # the LATEST low-priority arrival was evicted back to waiting with its
+    # generated token folded into the prompt for recompute
+    assert lo1.phase is Phase.WAITING and lo1.preemptions == 1
+    assert lo1.history == [7] and len(lo1.prompt) == 17
+    assert lo0.phase is Phase.DECODE                    # survivor
+    assert kv.stats()["evictions"] == 1
+    kv.check_invariants()
+
+
+def test_scheduler_no_preemption_of_equal_or_higher_priority():
+    kv = BlockPoolKV(_kvcfg(num_slots=2, num_pages=7))
+    sched = PhaseScheduler(SchedulerConfig(num_slots=2))
+    a, b = _req(0, 16, prio=3), _req(1, 16, prio=3)
+    sched.submit(a)
+    sched.submit(b)
+    sched.admit(kv)
+    c = _req(2, 16, prio=3)                             # equal priority
+    sched.submit(c)
+    assert sched.admit(kv) == []                        # must wait
+    assert a.preemptions == b.preemptions == 0
+
+
+def test_decode_page_pressure_self_evicts_not_equal_peer():
+    """When a decoding slot needs its next page and only EQUAL-priority
+    peers are active, it evicts itself — peers are never targeted."""
+    kv = BlockPoolKV(_kvcfg(num_slots=2, num_pages=5))   # 4 usable pages
+    sched = PhaseScheduler(SchedulerConfig(num_slots=2,
+                                           decode_headroom_pages=0))
+    a, b = _req(0, 16, prio=2), _req(1, 16, prio=2)
+    sched.submit(a)
+    sched.submit(b)
+    sched.admit(kv)                                      # 2 pages each
+    for r in (a, b):
+        kv.advance(r.slot, 16)
+        r.prefill_pos = 16
+        r.phase = Phase.DECODE
+        r.generated = [1]
+    assert kv.free_pages == 0
+    evicted = sched.ensure_decode_pages(kv)              # a needs page 3
+    assert a in evicted and a.phase is Phase.WAITING
+    assert b.phase is Phase.DECODE and b.preemptions == 0
+    kv.check_invariants()
+
+
+def test_scheduler_prefill_budget_chunks():
+    kv = BlockPoolKV(_kvcfg(num_slots=4, num_pages=33, max_len=128))
+    cfg = SchedulerConfig(num_slots=4, prefill_chunk=16,
+                          prefill_token_budget=24)
+    sched = PhaseScheduler(cfg)
+    long_req, short_req = _req(0, 40, 0), _req(1, 8, 0)
+    sched.submit(long_req)
+    sched.submit(short_req)
+    sched.admit(kv)
+    jobs = sched.prefill_jobs()
+    # one chunk per request per tick, budget-capped: 16 (long) + 8 (short)
+    assert [(j.req.rid, j.count) for j in jobs] == [(0, 16), (1, 8)]
+    for j in jobs:
+        sched.finish_prefill_chunk(j.req, j.count)
+    assert short_req.phase is Phase.DECODE
+    assert long_req.phase is Phase.PREFILL and long_req.prefill_pos == 16
+
+
+# ---------------------------------------------------------------------------
+# engine: dense/paged equivalence + slot-write layout
+# ---------------------------------------------------------------------------
+
+def _serve(arch, kv_mode, prompts, **kw):
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine(arch, slots=2, max_len=48, max_new=6,
+                                 kv_mode=kv_mode, page_size=8, **kw)
+    for p in prompts:
+        engine.submit(p)
+    return engine.run(), engine
+
+
+def _prompts(vocab=256, n=5, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, int(n_)).astype(np.int32)
+            for n_ in rng.integers(4, 20, n)]
+
+
+def test_paged_vs_dense_equivalence():
+    """Same prompts, same seeds -> identical greedy tokens from the dense
+    slot engine and the paged block-pool engine (and its int8 variant must
+    produce full-length outputs too)."""
+    prompts = _prompts()
+    dense, _ = _serve("qwen3-4b", "dense", prompts)
+    paged, eng = _serve("qwen3-4b", "paged", prompts)
+    assert dense == paged
+    assert eng.kv_stats()["peak_bytes"] > 0
+    int8, _ = _serve("qwen3-4b", "paged_int8", prompts)
+    assert sorted(int8) == sorted(dense)
+    assert all(len(v) == 6 for v in int8.values())
+
+
+def test_engine_preemption_under_page_pressure():
+    """Decode growth past the admission reservation triggers eviction of
+    the lowest-priority request; everyone still completes."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine("qwen3-4b", slots=3, max_len=64,
+                                 max_new=16, kv_mode="paged", page_size=8,
+                                 num_pages=11)
+    rng = np.random.default_rng(1)
+    for prio in (0, 0, 5):
+        engine.submit(rng.integers(0, vocab, 12).astype(np.int32),
+                      priority=prio)
+    res = engine.run()
+    assert len(res) == 3 and all(len(v) == 16 for v in res.values())
+    assert engine.kv_stats()["evictions"] >= 1
+    assert engine._requests[2].preemptions == 0   # high priority survives
+
+
+def test_write_slot_uses_declared_batch_axes():
+    """Regression for the seed's hardwired (L, B, ...) slot-write layout:
+    a cache entry with batch at axis 2 (recurrentgemma's grouped states)
+    round-trips correctly when the bundle declares its axes."""
+
+    class DeclaredBundle:
+        def cache_batch_axes(self, cache):
+            return {"weird": 2, "k": 1, "length": 0}
+
+    eng = ServingEngine.__new__(ServingEngine)     # no model needed
+    eng.bundle = DeclaredBundle()
+    eng._cache_axes = None
+    cache = {
+        "weird": jnp.zeros((2, 3, 4, 5)),          # batch axis 2 (size 4)
+        "k": jnp.zeros((2, 4, 6)),                 # batch axis 1
+        "length": jnp.zeros((4,), jnp.int32),
+    }
+    one = {
+        "weird": jnp.ones((2, 3, 1, 5)) * 7,
+        "k": jnp.ones((2, 1, 6)) * 3,
+        "length": jnp.asarray([9], jnp.int32),
+    }
+    out = eng._write_slot(cache, one, 2)
+    np.testing.assert_array_equal(np.asarray(out["weird"][:, :, 2]), 7.0)
+    np.testing.assert_array_equal(np.asarray(out["weird"][:, :, 1]), 0.0)
+    np.testing.assert_array_equal(np.asarray(out["k"][:, 2]), 3.0)
+    np.testing.assert_array_equal(np.asarray(out["k"][:, 0]), 0.0)
+    assert int(out["length"][2]) == 9 and int(out["length"][0]) == 0
+
+
+def test_serving_recurrentgemma_grouped_states():
+    """The family whose cache layout violates the old axis-1 assumption
+    now serves through the pooled engine (declared CACHE_BATCH_AXES)."""
+    from repro.launch.serve import run as serve_run
+    results = serve_run("recurrentgemma-9b", smoke=True, n_requests=3,
+                        slots=2, prompt_len=6, max_new=4, max_len=32)
+    assert len(results) == 3
+    assert all(len(v) == 4 for v in results.values())
+
+
+def test_dense_prefill_bucketing_trace_reuse():
+    """Length-bucketed prefill: distinct prompt lengths within one bucket
+    share a single jit trace (the seed retraced per length)."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine("qwen3-4b", slots=2, max_len=64, max_new=2)
+    rng = np.random.default_rng(0)
+    for n in (5, 6, 7, 8):                  # one bucket (8)
+        engine.submit(rng.integers(0, vocab, n).astype(np.int32))
+    engine.run()
+    n_traces = engine._prefill._cache_size()
+    assert n_traces == 1, n_traces
+
+
+def test_paged_pool_specs_shapes():
+    from repro.parallel.sharding import paged_pool_specs
+    from repro.runtime import compat
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    specs = paged_pool_specs(mesh, kv_heads=4, head_dim=64)
+    assert set(specs) >= {"k", "v", "k_scale", "v_scale", "page_table",
+                          "lengths"}
+    assert len(specs["k"]) == 5 and len(specs["k_scale"]) == 4
