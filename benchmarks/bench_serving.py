@@ -79,7 +79,10 @@ def _serve(kv_mode: str, n_requests: int, max_new: int):
     }
 
 
-def main(csv=True, n_requests: int = 12, max_new: int = 16):
+def main(csv=True, n_requests: int = 12, max_new: int = 16,
+         smoke: bool = False):
+    if smoke:
+        n_requests, max_new = 4, 6
     rows = []
     dense = _serve("dense", n_requests, max_new)
     for mode in ("dense", "paged", "paged_int8"):
@@ -102,7 +105,4 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized trace (fewer requests, shorter decode)")
     a = ap.parse_args()
-    if a.smoke:
-        main(csv=True, n_requests=4, max_new=6)
-    else:
-        main(csv=True)
+    main(csv=True, smoke=a.smoke)

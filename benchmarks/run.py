@@ -1,31 +1,89 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows for: Table III (traffic + perf), Fig. 3 (classic rooflines),
 # Fig. 4 (exclusive workloads), the Pallas kernel micro-bench, the
-# 40-cell dry-run roofline table, and the scheduler-engine micro-bench.
+# scheduler-engine micro-bench, the serving-engine KV-mode comparison, the
+# ring-attention fwd/bwd table (§Perf B6) and the model-zoo dry-run +
+# end-to-end tables.
+#
+# ``--smoke`` runs the CI-sized variant of every bench that has one (and
+# skips the slow kernel sweep); ``--json-out PATH`` additionally writes the
+# collected rows as JSON — CI uploads that file (BENCH_smoke.json) as a
+# workflow artifact so the perf trajectory is tracked per PR.
+import argparse
+import inspect
 import io
+import json
 import os
 import sys
 from contextlib import redirect_stdout
 
+# make `from benchmarks import ...` work when invoked as a script path
+# (python benchmarks/run.py) and not only as `python -m benchmarks.run`
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
-def main() -> None:
+
+def _collect(mod, **kwargs) -> list[str]:
+    """Run one bench module's main(csv=True, ...) and return its CSV rows,
+    passing only the kwargs its signature accepts (not every bench has a
+    smoke mode)."""
+    params = inspect.signature(mod.main).parameters
+    kwargs = {k: v for k, v in kwargs.items() if k in params}
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        mod.main(csv=True, **kwargs)
+    return [line for line in buf.getvalue().splitlines()
+            if line and not line.startswith("name,")]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: smoke variants, skip the kernel "
+                         "sweep")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the rows as JSON (perf-trajectory "
+                         "artifact)")
+    args = ap.parse_args(argv)
+
     # Persist scheduler searches under .cache/ so repeated benchmark runs
     # start warm (see repro/core/autotune.py; delete .cache/ to reset).
     os.environ.setdefault("REPRO_SCHED_DISK_CACHE", "1")
-    from benchmarks import (bench_dryrun, bench_kernels, bench_roofline_fig3,
-                            bench_roofline_fig4, bench_scheduler,
-                            bench_serving, bench_table3)
+    from benchmarks import (bench_dryrun, bench_kernels, bench_ring,
+                            bench_roofline_fig3, bench_roofline_fig4,
+                            bench_scheduler, bench_serving, bench_table3)
+    mods = [bench_scheduler, bench_table3, bench_roofline_fig3,
+            bench_roofline_fig4, bench_kernels, bench_serving, bench_ring,
+            bench_dryrun]
+    if args.smoke:
+        mods.remove(bench_kernels)   # Pallas interpret sweep: minutes on CPU
+
     print("name,us_per_call,derived")
-    for mod in (bench_scheduler, bench_table3, bench_roofline_fig3,
-                bench_roofline_fig4, bench_kernels, bench_serving,
-                bench_dryrun):
-        buf = io.StringIO()
-        with redirect_stdout(buf):
-            mod.main(csv=True)
-        for line in buf.getvalue().splitlines():
-            if line and not line.startswith("name,"):
-                print(line)
+    rows: list[str] = []
+    for mod in mods:
+        kw = {"smoke": args.smoke}
+        if args.smoke and mod is bench_scheduler:
+            kw["reps"] = 3
+        for line in _collect(mod, **kw):
+            rows.append(line)
+            print(line)
         sys.stdout.flush()
+
+    if args.json_out:
+        parsed = []
+        for line in rows:
+            name, us, derived = (line.split(",", 2) + ["", ""])[:3]
+            try:
+                us_f = float(us)
+            except ValueError:
+                us_f = 0.0
+            parsed.append({"name": name, "us_per_call": us_f,
+                           "derived": derived})
+        with open(args.json_out, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": parsed}, f, indent=1)
+        print(f"[run] wrote {len(parsed)} rows to {args.json_out}",
+              file=sys.stderr)
 
 
 if __name__ == '__main__':

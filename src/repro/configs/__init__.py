@@ -1,7 +1,8 @@
 """Config registry: ``get_bundle(arch_id, smoke=False)`` + the shape table."""
 from __future__ import annotations
 
-from .base import SHAPES, ArchBundle
+from .base import (RING_MODES, SHAPES, ArchBundle, RingAttnPolicy,
+                   decide_ring, ring_attn_policy)
 from . import (granite_moe_3b, internvl2_26b, mamba2_370m, olmoe_1b_7b,
                qwen1_5_32b, qwen2_5_14b, qwen3_4b, recurrentgemma_9b,
                whisper_medium, yi_9b)
@@ -19,4 +20,5 @@ def get_bundle(arch_id: str, smoke: bool = False) -> ArchBundle:
     return mod.smoke_bundle() if smoke else mod.full_bundle()
 
 
-__all__ = ["SHAPES", "ArchBundle", "REGISTRY", "ARCH_IDS", "get_bundle"]
+__all__ = ["SHAPES", "ArchBundle", "REGISTRY", "ARCH_IDS", "get_bundle",
+           "RING_MODES", "RingAttnPolicy", "decide_ring", "ring_attn_policy"]

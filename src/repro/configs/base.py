@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Any, Callable
 
 import numpy as np
@@ -31,6 +32,73 @@ SHAPES = {
     "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
     "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
 }
+
+
+# ---------------------------------------------------------------------------
+# Context-parallel ring-attention policy (§Perf B6)
+#
+# This replaces the old mutable ``models.layers.RING_PPERMUTE`` module
+# global: callers resolve a policy here (explicit argument > REPRO_RING_ATTN
+# env > default) instead of monkeypatching module state, so tests and
+# benchmarks can pick a path per call or per process.
+# ---------------------------------------------------------------------------
+
+RING_MODES = ("auto", "ring", "replicated", "off")
+
+
+@dataclasses.dataclass(frozen=True)
+class RingAttnPolicy:
+    """How ``models.layers.attention`` distributes long sequences over the
+    ``model`` mesh axis.
+
+    mode:
+      * ``auto``       — ppermute ring (memory-flat custom VJP) for long
+        sequences, replicated-k/v shard_map below ``seq_threshold`` (the
+        XLA fallback: short sequences don't amortize the hop latency);
+      * ``ring``       — always the ring when shapes divide;
+      * ``replicated`` — always the replicated-k/v shard_map (§Perf B5);
+      * ``off``        — neither; GSPMD constraint-based layout only.
+
+    ``max_seq_per_device`` caps the ring shard: above it the per-hop
+    (S/m x S/m) score tile outgrows the blocked XLA path's q-chunked
+    tiles, so ``auto`` falls back to the replicated path."""
+    mode: str = "auto"
+    seq_threshold: int = 4096
+    max_seq_per_device: int = 4096
+
+
+DEFAULT_RING_POLICY = RingAttnPolicy()
+
+
+def ring_attn_policy(mode_override: str | None = None) -> RingAttnPolicy:
+    """Resolve the active ring policy.  Precedence: explicit
+    ``mode_override`` (e.g. ``TransformerConfig.ring_attn`` or a test's
+    keyword) > ``REPRO_RING_ATTN`` env var > ``DEFAULT_RING_POLICY``.
+    ``REPRO_RING_ATTN_THRESHOLD`` / ``REPRO_RING_ATTN_MAX_SHARD`` tune the
+    ``auto`` thresholds from the environment."""
+    mode = (mode_override or os.environ.get("REPRO_RING_ATTN")
+            or DEFAULT_RING_POLICY.mode)
+    if mode not in RING_MODES:
+        raise ValueError(f"ring-attention mode {mode!r} not in {RING_MODES}")
+    thr = int(os.environ.get("REPRO_RING_ATTN_THRESHOLD",
+                             DEFAULT_RING_POLICY.seq_threshold))
+    cap = int(os.environ.get("REPRO_RING_ATTN_MAX_SHARD",
+                             DEFAULT_RING_POLICY.max_seq_per_device))
+    return RingAttnPolicy(mode=mode, seq_threshold=thr,
+                          max_seq_per_device=cap)
+
+
+def decide_ring(policy: RingAttnPolicy, *, seq_len: int,
+                ring_size: int) -> str:
+    """Pick the context-parallel mode for a global sequence of
+    ``seq_len`` on a ``ring_size``-wide model axis: 'ring', 'replicated'
+    or 'off'."""
+    if policy.mode != "auto":
+        return policy.mode
+    if (seq_len >= policy.seq_threshold
+            and seq_len // ring_size <= policy.max_seq_per_device):
+        return "ring"
+    return "replicated"
 
 
 @dataclasses.dataclass

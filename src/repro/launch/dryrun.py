@@ -1,5 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# merge, don't clobber: callers that already forced a device count
+# (benchmark workers, tests) keep theirs, callers with unrelated XLA_FLAGS
+# still get the 512-device forcing — jax only reads this at init.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        _flags + " --xla_force_host_platform_device_count=512").strip()
+del _flags
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -32,14 +39,23 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "dryrun")
 
 
-def _cell_path(arch, shape, mesh_name):
+def _cell_path(arch, shape, mesh_name, ring=None):
     safe = arch.replace(".", "_")
-    return os.path.join(RESULTS_DIR, f"{safe}__{shape}__{mesh_name}.json")
+    # ring-pinned cells cache separately (and out of bench_dryrun's
+    # `*__<mesh>.json` glob) so mode comparisons never read stale cells
+    # traced under a different attention mode.
+    suffix = f"__ring-{ring}" if ring else ""
+    return os.path.join(RESULTS_DIR,
+                        f"{safe}__{shape}__{mesh_name}{suffix}.json")
 
 
 def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
-             ring: bool = False) -> dict:
-    path = _cell_path(arch, shape, mesh_name)
+             ring: str | None = None) -> dict:
+    """Lower + compile one cell.  ``ring`` pins the context-parallel
+    attention mode for this cell ('ring' | 'replicated' | 'off' | 'auto')
+    via the REPRO_RING_ATTN policy env read at trace time; None keeps the
+    ambient policy."""
+    path = _cell_path(arch, shape, mesh_name, ring)
     if os.path.exists(path) and not force:
         with open(path) as f:
             return json.load(f)
@@ -47,11 +63,16 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
     bundle = get_bundle(arch)
     t0 = time.time()
     result = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    if ring:
+        result["ring"] = ring
     ok, why = bundle.supports(shape)
     if not ok:
         result.update(status="skipped", reason=why)
     else:
+        prev_ring = os.environ.get("REPRO_RING_ATTN")
         try:
+            if ring:
+                os.environ["REPRO_RING_ATTN"] = ring
             mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
             chips = mesh.devices.size
             args, shardings, step, donate = step_in_shardings(
@@ -60,7 +81,7 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
                 lowered = jax.jit(step, in_shardings=shardings,
                                   donate_argnums=donate).lower(*args)
                 compiled = lowered.compile()
-            mem = compiled.memory_analysis()
+            mem = compat.memory_stats(compiled)
             xla_cost = compat.cost_analysis(compiled)
             # scan-aware per-device costs (XLA's cost_analysis counts while
             # bodies once — see analysis/hlo_cost.py); x chips = global.
@@ -95,18 +116,13 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
                 model_flops=mflops,
                 model_bytes=bundle.min_hbm_bytes(shape),
                 memory_analysis={
-                    "argument_size_gb":
-                        getattr(mem, "argument_size_in_bytes", 0) / 1e9,
-                    "output_size_gb":
-                        getattr(mem, "output_size_in_bytes", 0) / 1e9,
-                    "temp_size_gb":
-                        getattr(mem, "temp_size_in_bytes", 0) / 1e9,
-                    # donated outputs (params/opt/cache) alias their inputs
-                    # on TPU, so device peak ~= arguments + temporaries (the
+                    "argument_size_gb": mem["argument_bytes"] / 1e9,
+                    "output_size_gb": mem["output_bytes"] / 1e9,
+                    "temp_size_gb": mem["temp_bytes"] / 1e9,
+                    # peak_bytes = args + temps: donated outputs
+                    # (params/opt/cache) alias their inputs on TPU (the
                     # CPU backend ignores donation, hence not args+temp+out)
-                    "peak_gb_per_device": (
-                        getattr(mem, "argument_size_in_bytes", 0)
-                        + getattr(mem, "temp_size_in_bytes", 0)) / 1e9,
+                    "peak_gb_per_device": mem["peak_bytes"] / 1e9,
                 },
             )
             print(f"[dryrun] {arch} x {shape} x {mesh_name}: OK "
@@ -118,6 +134,12 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
                           traceback=traceback.format_exc()[-2000:])
             print(f"[dryrun] {arch} x {shape} x {mesh_name}: "
                   f"FAIL {type(e).__name__}: {e}")
+        finally:
+            if ring:
+                if prev_ring is None:
+                    os.environ.pop("REPRO_RING_ATTN", None)
+                else:
+                    os.environ["REPRO_RING_ATTN"] = prev_ring
 
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(path, "w") as f:
@@ -144,6 +166,11 @@ def main() -> None:
     ap.add_argument("--mesh", default="both",
                     choices=["single", "multi", "both"])
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--ring", default=None,
+                    choices=["auto", "ring", "replicated", "off"],
+                    help="pin the context-parallel attention mode for "
+                         "every cell (default: ambient REPRO_RING_ATTN "
+                         "policy)")
     args = ap.parse_args()
 
     archs = [args.arch] if args.arch else list(ARCH_IDS)
@@ -155,7 +182,8 @@ def main() -> None:
     for arch in archs:
         for shape in shapes:
             for mesh_name in meshes:
-                r = run_cell(arch, shape, mesh_name, force=args.force)
+                r = run_cell(arch, shape, mesh_name, force=args.force,
+                             ring=args.ring)
                 s = r["status"]
                 n_ok += s == "ok"
                 n_skip += s == "skipped"

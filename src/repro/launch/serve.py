@@ -62,11 +62,14 @@ class _BundleAdapter:
 def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
                  max_len: int = 64, max_new: int = 8, kv_mode: str = "dense",
                  page_size: int = 16, num_pages: int | None = None,
-                 prefill_chunk: int = 32, seed: int = 0, mesh=None):
+                 prefill_chunk: int = 32, seed: int = 0, mesh=None,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
     """(engine, vocab) ready for submit()/run() — shared by the launcher,
     tests and benchmarks so every caller serves through the same stack.
     ``mesh`` (a concrete Mesh) shards the paged pool per
-    ``parallel.sharding.paged_pool_specs``."""
+    ``parallel.sharding.paged_pool_specs``.  ``temperature``/``top_k``/
+    ``sample_seed`` select seeded sampled decode (greedy by default)."""
     bundle = get_bundle(arch, smoke=smoke)
     params = bundle.init_params(jax.random.PRNGKey(seed))
     extras = {}
@@ -80,7 +83,9 @@ def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
         _BundleAdapter(bundle, extras), params,
         ServeConfig(batch=slots, max_len=max_len, max_new_tokens=max_new,
                     kv_mode=kv_mode, page_size=page_size,
-                    num_pages=num_pages, prefill_chunk=prefill_chunk),
+                    num_pages=num_pages, prefill_chunk=prefill_chunk,
+                    temperature=temperature, top_k=top_k,
+                    sample_seed=sample_seed),
         mesh=mesh)
     return engine, bundle.cfg.vocab
 
@@ -88,11 +93,12 @@ def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
 def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
         slots: int = 4, prompt_len: int = 12, max_new: int = 8,
         max_len: int = 64, seed: int = 0, kv_mode: str = "dense",
-        page_size: int = 16, num_pages: int | None = None) -> dict:
+        page_size: int = 16, num_pages: int | None = None,
+        temperature: float = 0.0, top_k: int = 0) -> dict:
     engine, vocab = build_engine(
         arch, smoke=smoke, slots=slots, max_len=max_len, max_new=max_new,
         kv_mode=kv_mode, page_size=page_size, num_pages=num_pages,
-        seed=seed)
+        seed=seed, temperature=temperature, top_k=top_k, sample_seed=seed)
     rng = np.random.default_rng(seed)
     for _ in range(n_requests):
         prompt = rng.integers(0, vocab, size=prompt_len).astype(np.int32)
@@ -118,10 +124,15 @@ def main():
                     choices=("dense", "paged", "paged_int8"))
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples from softmax(logits/T)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k highest logits")
     a = ap.parse_args()
     results = run(a.arch, n_requests=a.requests, slots=a.slots,
                   max_new=a.max_new, kv_mode=a.kv_mode,
-                  page_size=a.page_size, num_pages=a.num_pages)
+                  page_size=a.page_size, num_pages=a.num_pages,
+                  temperature=a.temperature, top_k=a.top_k)
     for rid, toks in sorted(results.items()):
         print(f"  req {rid}: {toks}")
 

@@ -102,8 +102,16 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # Attention (GQA) — XLA paths for lowering; Pallas kernels are the TPU path.
 # ---------------------------------------------------------------------------
 
-# opt-in: true ppermute-ring attention (see _attention_ring.ring_body)
-RING_PPERMUTE = False
+def _ring_mode(S: int, m: int, override: str | None = None) -> str:
+    """Resolve the context-parallel mode ('ring' | 'replicated' | 'off')
+    for a global sequence of S on an m-wide model axis.  The policy lives
+    in ``configs.base`` (explicit override > REPRO_RING_ATTN env >
+    default); imported lazily to keep the configs<->models import order
+    acyclic."""
+    from repro.configs import base as cbase
+    return cbase.decide_ring(cbase.ring_attn_policy(override),
+                             seq_len=S, ring_size=m)
+
 
 def _grouped_scores_full(q, k, v, *, causal, window, q_offset=0):
     """Full-mask attention. q: (B, S, H, Dh); k/v: (B, Sk, Hkv, Dh)."""
@@ -220,15 +228,25 @@ def _attention_blocked(q, k, v, *, causal, window, q_chunk=2048,
     return os.transpose(1, 0, 2, 3, 4).reshape(B, S, H, Dh)
 
 
-def _attention_ring(q, k, v, *, causal, window):
-    """Context-parallel attention as an explicit shard_map (§Perf B5).
+def _attention_ring(q, k, v, *, causal, window, ring: str | None = None):
+    """Context-parallel attention over the `model` mesh axis.
 
-    Each `model`-axis device computes attention for its own S/m sequence
-    slice of q against replicated k/v. The payoff is in BACKWARD: shard_map
-    AD transposes the replicated k/v inputs into ONE psum of dk/dv per
-    layer, instead of the per-q-block score-partial all-reduces GSPMD
-    emits for the constraint-based layout. Returns None when inapplicable
-    (no mesh / indivisible shapes) so the caller can fall back."""
+    Two schedules behind one policy (``configs.base.ring_attn_policy``;
+    ``ring`` overrides the mode for this call):
+
+    * ``ring`` — the ppermute ring (§Perf B6, the paper's FIFO mesh):
+      k/v stay SEQUENCE-SHARDED and hop neighbour-to-neighbour while each
+      device folds the visiting shard into its rows' online softmax.  The
+      memory-flat custom VJP in ``parallel.ring_attention`` (backward
+      recomputes each hop's score tile; dk/dv accumulators circulate with
+      the shards) is what lets this be the DEFAULT long-sequence path.
+    * ``replicated`` — the §Perf B5 shard_map: q sequence-sharded against
+      replicated k/v; shard_map AD transposes the replicated k/v into ONE
+      psum of dk/dv per layer.  The XLA fallback below the ring's
+      sequence threshold.
+
+    Returns None when inapplicable (no mesh / indivisible shapes / mode
+    'off') so the caller can fall back to the constraint-based layout."""
     mesh = compat.get_abstract_mesh()
     if mesh is None or getattr(mesh, "empty", False):
         return None
@@ -243,12 +261,18 @@ def _attention_ring(q, k, v, *, causal, window):
     B, S, H, Dh = q.shape
     if S % m != 0 or k.shape[1] != S:
         return None
-    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
-    dsz = 1
-    for a in daxes:
-        dsz *= mesh.shape[a]
-    dspec = (daxes if len(daxes) > 1 else daxes[0]) if (
-        daxes and B % dsz == 0) else None
+    from repro.parallel.ring_attention import data_axes_spec, ring_attention
+
+    mode = _ring_mode(S, m, ring)
+    if mode == "off":
+        return None
+    if mode == "ring":
+        out = ring_attention(q, k, v, causal=causal, window=window,
+                             mesh=mesh)
+        if out is not None:
+            return out
+
+    dspec = data_axes_spec(mesh, B)
     from jax.sharding import PartitionSpec as P
 
     def body(q_l, k_l, v_l):
@@ -257,74 +281,11 @@ def _attention_ring(q, k, v, *, causal, window):
                                   window=window, base_offset=off,
                                   use_constraints=False)
 
-    def ring_body(q_l, k_l, v_l):
-        """True ring schedule (§Perf B6 — the paper's FIFO mesh verbatim):
-        k/v stay SEQUENCE-SHARDED and hop neighbour-to-neighbour via
-        ppermute while each device folds the visiting shard into its local
-        q rows' online softmax — no k/v all-gather ever materializes, and
-        only one shard is in flight per step (the 4-deep FIFO analogue)."""
-        idx = jax.lax.axis_index("model")
-        S_l = q_l.shape[1]
-        q_off = idx * S_l
-        B_l, _, H_l, Dh_l = q_l.shape
-        Hkv = k_l.shape[2]
-        G = H_l // Hkv
-        qg = q_l.reshape(B_l, S_l, Hkv, G, Dh_l)
-        scale = 1.0 / math.sqrt(Dh_l)
-        qpos = q_off + jnp.arange(S_l)[:, None]
-        perm = [(i, (i + 1) % m) for i in range(m)]
-
-        def fold(carry, kv_owner, kb, vb):
-            mx, l, acc = carry
-            s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb,
-                           preferred_element_type=jnp.float32) * scale
-            kpos = kv_owner * S_l + jnp.arange(S_l)[None, :]
-            mask = jnp.ones((S_l, S_l), bool)
-            if causal:
-                mask = mask & (qpos >= kpos)
-            if window is not None:
-                mask = mask & ((qpos - kpos) < window)
-            s = jnp.where(mask, s, -1e30)
-            m_new = jnp.maximum(mx, s.max(-1))
-            p = jnp.exp(s - m_new[..., None])
-            alpha = jnp.exp(mx - m_new)
-            l = l * alpha + p.sum(-1)
-            acc = acc * alpha[..., None] + jnp.einsum(
-                "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
-                preferred_element_type=jnp.float32)
-            return (m_new, l, acc)
-
-        def step(i, carry):
-            k_c, v_c, st = carry
-            kv_owner = (idx - i) % m
-            st = fold(st, kv_owner, k_c, v_c)
-            # hand the shard to the neighbour — the FIFO hop
-            k_c = jax.lax.ppermute(k_c, "model", perm)
-            v_c = jax.lax.ppermute(v_c, "model", perm)
-            return (k_c, v_c, st)
-
-        vary = lambda x: compat.match_vma(x, qg)  # noqa: E731
-        st0 = (vary(jnp.full((B_l, Hkv, G, S_l), -1e30, jnp.float32)),
-               vary(jnp.zeros((B_l, Hkv, G, S_l), jnp.float32)),
-               vary(jnp.zeros((B_l, Hkv, G, S_l, Dh_l), jnp.float32)))
-        _, _, (mx, l, acc) = jax.lax.fori_loop(
-            0, m, step, (k_l, v_l, st0))
-        o = acc / jnp.where(l == 0, 1.0, l)[..., None]
-        return o.transpose(0, 3, 1, 2, 4).reshape(
-            B_l, S_l, H_l, Dh_l).astype(q_l.dtype)
-
-    # The true ring is kept as an opt-in mode (RING_PPERMUTE): its forward
-    # is strictly cheaper per byte on real ICI (point-to-point hops instead
-    # of an all-gather), but the naive backward saves every ring step's
-    # score tile (measured: memory term 17 -> 38 s on qwen2.5 train), so it
-    # needs a checkpointed fold / custom VJP before becoming the default —
-    # recorded as §Perf B6 (refuted as measured), enumerated next step.
-    use_ring = RING_PPERMUTE and (S // m) <= 4096
     fn = compat.shard_map(
-        ring_body if use_ring else body, mesh=mesh,
+        body, mesh=mesh,
         in_specs=(P(dspec, "model", None, None),
-                  P(dspec, "model" if use_ring else None, None, None),
-                  P(dspec, "model" if use_ring else None, None, None)),
+                  P(dspec, None, None, None),
+                  P(dspec, None, None, None)),
         out_specs=P(dspec, "model", None, None),
     )
     return fn(q, k, v)
@@ -370,9 +331,12 @@ def _shard_qblocks(qb):
 
 
 def attention(q, k, v, *, causal=True, window=None, impl="xla",
-              full_threshold: int = 2048, q_offset: int = 0):
-    """Dispatch: full-mask XLA for short seqs, double-blocked (flash-style)
-    scan for long ones, Pallas flash kernel when requested (TPU)."""
+              full_threshold: int = 2048, q_offset: int = 0,
+              ring: str | None = None):
+    """Dispatch: full-mask XLA for short seqs, context-parallel shard_map
+    (ppermute ring / replicated k/v, per the ring policy) or double-blocked
+    flash-style scan for long ones, Pallas flash kernel when requested
+    (TPU).  ``ring`` overrides the ring-policy mode for this call."""
     if impl == "pallas":
         from repro.kernels import ops as kops
         o = kops.flash_attention(
@@ -380,9 +344,10 @@ def attention(q, k, v, *, causal=True, window=None, impl="xla",
             v.transpose(0, 2, 1, 3), causal=causal, window=window)
         return o.transpose(0, 2, 1, 3)
     if max(q.shape[1], k.shape[1]) > full_threshold:
-        ring = _attention_ring(q, k, v, causal=causal, window=window)
-        if ring is not None:
-            return ring
+        out = _attention_ring(q, k, v, causal=causal, window=window,
+                              ring=ring)
+        if out is not None:
+            return out
         q, k, v = _shard_attn_inputs(q, k, v)
         return _attention_blocked(q, k, v, causal=causal, window=window)
     q, k, v = _shard_attn_inputs(q, k, v)

@@ -48,6 +48,9 @@ class TransformerConfig:
     vision_tokens: int = 0            # VLM prefix length (stub frontend)
     dtype: Any = jnp.bfloat16
     attn_impl: str = "xla"            # xla | pallas
+    ring_attn: str | None = None      # context-parallel mode override
+    #   (auto|ring|replicated|off); None defers to configs.base policy /
+    #   REPRO_RING_ATTN — see RingAttnPolicy
 
     @property
     def dh(self) -> int:
@@ -141,7 +144,7 @@ def _block_train(cfg: TransformerConfig, x, lp, positions):
     h = gather_seq(rms_norm(x, lp["ln1"], cfg.norm_eps))
     q, k, v = _qkv(cfg, lp, h, positions)
     o = attention(q, k, v, causal=True, window=cfg.window,
-                  impl=cfg.attn_impl)
+                  impl=cfg.attn_impl, ring=cfg.ring_attn)
     # saved by the remat policy: backward reuses the attention output
     # instead of re-streaming the whole flash pipeline (§Perf B1)
     from jax.ad_checkpoint import checkpoint_name
@@ -228,7 +231,7 @@ def prefill(cfg: TransformerConfig, params: dict, tokens: jax.Array,
         h = gather_seq(rms_norm(x, lp["ln1"], cfg.norm_eps))
         q, k, v = _qkv(cfg, lp, h, positions)
         o = attention(q, k, v, causal=True, window=cfg.window,
-                      impl=cfg.attn_impl)
+                      impl=cfg.attn_impl, ring=cfg.ring_attn)
         x = x + o.reshape(B, S, -1) @ lp["wo"]
         h = gather_seq(rms_norm(x, lp["ln2"], cfg.norm_eps))
         if cfg.moe:

@@ -15,16 +15,29 @@ than TWO B shards (double buffer = the 4-deep FIFO of the paper).
 
 HBM bytes per chip: all-gather baseline holds |B| per chip; ring holds
 2|B|/n — the same "no duplication in local buffers" win as Fig. 2.
+
+The BACKWARD is a custom VJP with the same stationarity (mirroring
+``parallel.ring_attention``): reverse-differentiating the fold loop would
+stack one B shard per step (the full |B| again, just deferred).  Instead a
+second ring pass keeps dA output-stationary (each device folds
+``g[:, cols_j] @ B_j^T`` as shard j visits) and circulates the dB
+accumulators alongside the B shards, so each shard's gradient arrives home
+after ``n`` hops with no psum and no saved per-step residuals.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.runtime import compat
+
+
+def _hop_perm(n: int):
+    return [(i, (i + 1) % n) for i in range(n)]
 
 
 def _ring_body(a_blk: jax.Array, b_blk: jax.Array, axis: str,
@@ -57,21 +70,94 @@ def _ring_body(a_blk: jax.Array, b_blk: jax.Array, axis: str,
     return out
 
 
+def _ring_bwd_body(spec, a_blk: jax.Array, b_blk: jax.Array,
+                   g_blk: jax.Array):
+    """Backward ring pass.  a_blk: (m_local, K); b_blk: (K, n_local);
+    g_blk: (m_local, N) — the local rows of the output cotangent.
+
+    dA stays output-stationary (local accumulate); dB accumulators ride
+    the ring with the B shards and are home after n hops."""
+    n, axis = spec.m, spec.axis
+    idx = jax.lax.axis_index(axis)
+    m_local, K = a_blk.shape
+    n_local = b_blk.shape[1]
+    perm = _hop_perm(n)
+
+    def step(i, carry):
+        b_c, db_c, da = carry
+        col = (idx - i) % n
+        g_c = jax.lax.dynamic_slice(g_blk, (0, col * n_local),
+                                    (m_local, n_local))
+        da = da + jnp.dot(g_c, b_c.T, preferred_element_type=jnp.float32)
+        db_c = db_c + jnp.dot(a_blk.T, g_c,
+                              preferred_element_type=jnp.float32)
+        # shard AND its gradient accumulator take the FIFO hop together
+        b_c = jax.lax.ppermute(b_c, axis, perm)
+        db_c = jax.lax.ppermute(db_c, axis, perm)
+        return (b_c, db_c, da)
+
+    vary = lambda x: compat.match_vma(x, g_blk)  # noqa: E731
+    st0 = (b_blk,
+           vary(jnp.zeros((K, n_local), jnp.float32)),
+           vary(jnp.zeros((m_local, K), jnp.float32)))
+    _, db, da = jax.lax.fori_loop(0, n, step, st0)
+    return da.astype(a_blk.dtype), db.astype(b_blk.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class _RingMmSpec:
+    mesh: object
+    axis: str
+    m: int
+    out_dtype: object
+
+
+def _shard_fwd(spec: _RingMmSpec, a, b):
+    fn = compat.shard_map(
+        functools.partial(_ring_body, axis=spec.axis,
+                          out_dtype=spec.out_dtype),
+        mesh=spec.mesh,
+        in_specs=(P(spec.axis, None), P(None, spec.axis)),
+        out_specs=P(spec.axis, None),
+    )
+    return fn(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _ring_mm(spec: _RingMmSpec, a, b):
+    return _shard_fwd(spec, a, b)
+
+
+def _ring_mm_fwd(spec: _RingMmSpec, a, b):
+    return _shard_fwd(spec, a, b), (a, b)
+
+
+def _ring_mm_bwd(spec: _RingMmSpec, res, g):
+    a, b = res
+    fn = compat.shard_map(
+        functools.partial(_ring_bwd_body, spec), mesh=spec.mesh,
+        in_specs=(P(spec.axis, None), P(None, spec.axis),
+                  P(spec.axis, None)),
+        out_specs=(P(spec.axis, None), P(None, spec.axis)),
+    )
+    return fn(a, b, g)
+
+
+_ring_mm.defvjp(_ring_mm_fwd, _ring_mm_bwd)
+
+
 def ring_matmul(a: jax.Array, b: jax.Array, mesh: Mesh, axis: str = "model",
                 out_dtype=None) -> jax.Array:
     """A (M, K) row-sharded x B (K, N) col-sharded -> C (M, N) row-sharded.
 
-    Output-stationary: C shards never move; B shards ring-hop. The innermost
-    jnp.dot can itself be the Pallas TEU matmul on real hardware.
+    Output-stationary forward AND backward (custom VJP; see module
+    docstring). The innermost jnp.dot can itself be the Pallas TEU matmul
+    on real hardware.
     """
     out_dtype = out_dtype or a.dtype
-    fn = shard_map_fn = compat.shard_map(
-        functools.partial(_ring_body, axis=axis, out_dtype=out_dtype),
-        mesh=mesh,
-        in_specs=(P(axis, None), P(None, axis)),
-        out_specs=P(axis, None),
-    )
-    return fn(a, b)
+    spec = _RingMmSpec(mesh=mesh, axis=axis, m=int(mesh.shape[axis]),
+                       out_dtype=jnp.dtype(out_dtype))
+    return _ring_mm(spec, a, b)
 
 
 def ring_matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:

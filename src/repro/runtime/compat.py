@@ -91,6 +91,14 @@ Shim inventory (new spelling -> introduced -> old fallback):
     but a one-element ``list`` of dicts on 0.4.x.  This wrapper always
     returns the flat dict (``{}`` for an empty list).
 
+``memory_stats(compiled)``
+    Normalized ``Compiled.memory_analysis()`` byte counts.  The analysis
+    object's availability and attribute spellings vary by backend and
+    release (some backends return ``None``, some raise, TPU adds fields
+    CPU lacks), so this wrapper always returns the same four-key dict
+    with zeros for anything missing — callers treat it as best-effort
+    telemetry (dry-run tables, ring benchmarks, residual-size tests).
+
 ``tree_map`` / ``tree_leaves`` / ``tree_flatten`` / ``tree_unflatten``
     ``jax.tree.*`` (added 0.4.25, the preferred spelling; the historical
     ``jax.tree_map`` aliases were deleted in 0.6).  Fallback:
@@ -120,7 +128,7 @@ __all__ = [
     "pcast", "vma", "match_vma",
     "Element", "element_block_spec", "prefetch_scalar_grid_spec",
     "tpu_compiler_params",
-    "cost_analysis",
+    "cost_analysis", "memory_stats",
     "tree_map", "tree_leaves", "tree_flatten", "tree_unflatten",
     "random_key",
 ]
@@ -326,6 +334,33 @@ def cost_analysis(compiled) -> dict[str, float]:
     if isinstance(cost, (list, tuple)):
         cost = cost[0] if cost else {}
     return cost
+
+
+def memory_stats(compiled) -> dict[str, int]:
+    """Normalized ``Compiled.memory_analysis()`` numbers, in bytes.
+
+    Always returns ``{"argument_bytes", "output_bytes", "temp_bytes",
+    "peak_bytes"}`` with zeros when the backend offers no analysis or an
+    attribute is missing.  ``peak_bytes`` is arguments + temporaries:
+    donated outputs alias their inputs on TPU, so args+temp approximates
+    the device peak (the CPU backend ignores donation, hence not
+    args+temp+out)."""
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:  # noqa: BLE001 — backend without the analysis
+        mem = None
+
+    def _get(name: str) -> int:
+        try:
+            return int(getattr(mem, name, 0) or 0)
+        except Exception:  # noqa: BLE001 — non-numeric drift
+            return 0
+
+    arg = _get("argument_size_in_bytes")
+    out = _get("output_size_in_bytes")
+    tmp = _get("temp_size_in_bytes")
+    return {"argument_bytes": arg, "output_bytes": out,
+            "temp_bytes": tmp, "peak_bytes": arg + tmp}
 
 
 # ---------------------------------------------------------------------------

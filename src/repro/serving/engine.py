@@ -25,7 +25,9 @@ Two KV modes behind one interface (``ServeConfig.kv_mode``):
     ``batch x max_len``.  ``paged_int8`` keeps the pool quantized with
     per-(token, head) scale tables.
 
-Greedy sampling (temperature hook provided).  Caches and steps follow
+Sampling: greedy by default (``temperature == 0``); ``temperature`` plus
+optional ``top_k`` switch decode to seeded host-side softmax sampling
+(``sample_seed`` makes traces replayable).  Caches and steps follow
 ``repro.parallel.sharding`` (``paged_pool_specs`` for the pool); the
 engine itself is host-side control logic and is exercised on CPU in tests.
 """
@@ -50,7 +52,9 @@ class ServeConfig:
     max_len: int
     max_new_tokens: int = 32
     eos_id: int = -1        # -1: never stop early
-    temperature: float = 0.0
+    temperature: float = 0.0        # 0: greedy; > 0: sampled decode
+    top_k: int = 0                  # 0: full vocab; else sample top-k only
+    sample_seed: int = 0            # host RNG seed (deterministic traces)
     kv_mode: str = "dense"          # dense | paged | paged_int8
     page_size: int = 16             # paged: tokens per page
     num_pages: int | None = None    # paged: pool size (None = dense capacity)
@@ -89,10 +93,40 @@ class ServingEngine:
         self.mesh = mesh               # concrete Mesh: shard the page pool
         self.results: dict[int, list[int]] = {}
         self._next_id = 0
+        self._rng = np.random.default_rng(cfg.sample_seed)
         if cfg.kv_mode == "dense":
             self._init_dense()
         else:
             self._init_paged()
+
+    # ------------------------------------------------------------------
+    # sampling
+    # ------------------------------------------------------------------
+
+    @property
+    def _greedy(self) -> bool:
+        return self.cfg.temperature <= 0.0
+
+    def _pick(self, row) -> int:
+        """Next token from one vocab-sized logit row (jax or numpy).
+
+        Greedy at ``temperature == 0`` (the default — deterministic
+        traces for tests/benchmarks; argmax stays on device so only a
+        scalar crosses to the host); otherwise temperature-scaled
+        softmax sampling, optionally restricted to the ``top_k``
+        highest-logit tokens.  Sampling happens host-side from the
+        engine's seeded RNG: only ACTIVE slots draw (in slot order), so
+        a given (seed, trace) pair always replays the same tokens."""
+        cfg = self.cfg
+        if self._greedy:
+            return int(jnp.argmax(row))
+        z = np.asarray(row, np.float64) / cfg.temperature
+        if 0 < cfg.top_k < z.size:
+            kth = np.partition(z, -cfg.top_k)[-cfg.top_k]
+            z = np.where(z >= kth, z, -np.inf)
+        z = z - z.max()
+        p = np.exp(z)
+        return int(self._rng.choice(z.size, p=p / p.sum()))
 
     # ------------------------------------------------------------------
     # intake
@@ -182,7 +216,7 @@ class ServingEngine:
             else:
                 logits, c1 = self._prefill(self.params, toks,
                                            self._prefill_template)
-            nxt = int(jnp.argmax(logits[0, -1]))
+            nxt = self._pick(logits[0, -1])
             cache = self._write_slot(cache, c1, slot_idx)
             s = self.slots[slot_idx]
             s.request_id = rid
@@ -226,11 +260,14 @@ class ServingEngine:
                     last[i, 0] = s.generated[-1]
             logits, cache = self._decode(self.params, jnp.asarray(last),
                                          cache)
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            # greedy: batch argmax on device, ints cross to host; sampled:
+            # one host copy of the active rows feeds the seeded picker
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)) \
+                if self._greedy else np.asarray(logits[:, 0])
             for i, s in enumerate(self.slots):
                 if s.request_id is None:
                     continue
-                tok = int(nxt[i])
+                tok = int(nxt[i]) if self._greedy else self._pick(nxt[i])
                 s.generated.append(tok)
                 s.remaining -= 1
                 if s.remaining <= 0 or tok == cfg.eos_id:
@@ -339,7 +376,7 @@ class ServingEngine:
                 self.kv.advance(req.slot, n)
                 self.sched.finish_prefill_chunk(req, n)
                 if req.phase is Phase.DECODE:
-                    nxt = int(jnp.argmax(logits[0, n - 1]))
+                    nxt = self._pick(logits[0, n - 1])
                     req.generated.append(nxt)
                     if req.n_generated >= req.max_new_tokens or \
                             nxt == cfg.eos_id:
@@ -361,10 +398,12 @@ class ServingEngine:
             mp = self._pages_view(
                 max(int(self.kv.lengths[r.slot]) + 1 for r in decoding))
             logits = self._exec_step(last, list(range(B)), counts, mp)
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)) \
+                if self._greedy else np.asarray(logits[:, 0])
             for req in decoding:
                 self.kv.advance(req.slot, 1)
-                tok = int(nxt[req.slot])
+                tok = int(nxt[req.slot]) if self._greedy else \
+                    self._pick(nxt[req.slot])
                 req.generated.append(tok)
                 if req.n_generated >= req.max_new_tokens or \
                         tok == cfg.eos_id:

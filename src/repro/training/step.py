@@ -29,7 +29,8 @@ class TrainHyper:
     z_weight: float = 1e-4        # z-loss for logit stability
 
 
-def loss_fn(forward: Callable, params: Any, batch: dict) -> tuple:
+def loss_fn(forward: Callable, params: Any, batch: dict,
+            aux_weight: float = 0.01, z_weight: float = 1e-4) -> tuple:
     """Next-token CE + MoE aux + z-loss. forward(params, batch)->(logits,aux).
 
     The label logit is extracted with a masked SUM over the vocab axis (not
@@ -47,13 +48,14 @@ def loss_fn(forward: Callable, params: Any, batch: dict) -> tuple:
         jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
     ce = (logz - at_label).mean()
     zloss = (logz ** 2).mean()
-    return ce + 0.01 * aux + 1e-4 * zloss, (ce, aux)
+    return ce + aux_weight * aux + z_weight * zloss, (ce, aux)
 
 
 def make_train_step(forward: Callable, hyper: TrainHyper) -> Callable:
     """forward(params, batch) -> (logits, aux)."""
 
-    flc = functools.partial(loss_fn, forward)
+    flc = functools.partial(loss_fn, forward, aux_weight=hyper.aux_weight,
+                            z_weight=hyper.z_weight)
     if hyper.remat:
         flc = jax.checkpoint(
             flc, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)

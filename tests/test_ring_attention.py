@@ -1,0 +1,54 @@
+"""Ring-attention policy plumbing (single device — the multi-device
+numerics live in tests/test_distributed.py).
+
+The policy replaced the old mutable ``layers.RING_PPERMUTE`` module
+global: resolution is explicit-override > REPRO_RING_ATTN env > default,
+and 'auto' picks ring vs the replicated XLA fallback by sequence
+threshold and per-device shard cap."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import (DEFAULT_RING_POLICY, RingAttnPolicy,
+                                decide_ring, ring_attn_policy)
+from repro.parallel.ring_attention import ring_attention
+
+
+def test_auto_policy_thresholds():
+    pol = DEFAULT_RING_POLICY
+    # long sequence, sane shard -> the ring is the default path
+    assert decide_ring(pol, seq_len=4096, ring_size=8) == "ring"
+    assert decide_ring(pol, seq_len=32768, ring_size=16) == "ring"
+    # short sequence -> XLA fallback (replicated k/v)
+    assert decide_ring(pol, seq_len=2048, ring_size=8) == "replicated"
+    # shard above the per-device cap -> fall back too
+    assert decide_ring(pol, seq_len=65536, ring_size=8) == "replicated"
+    # non-auto modes pass through
+    for mode in ("ring", "replicated", "off"):
+        assert decide_ring(RingAttnPolicy(mode=mode), seq_len=1,
+                           ring_size=2) == mode
+
+
+def test_policy_resolution_order(monkeypatch):
+    monkeypatch.delenv("REPRO_RING_ATTN", raising=False)
+    assert ring_attn_policy().mode == "auto"
+    monkeypatch.setenv("REPRO_RING_ATTN", "replicated")
+    assert ring_attn_policy().mode == "replicated"
+    # explicit override beats the env
+    assert ring_attn_policy("ring").mode == "ring"
+    monkeypatch.setenv("REPRO_RING_ATTN_THRESHOLD", "128")
+    monkeypatch.setenv("REPRO_RING_ATTN_MAX_SHARD", "256")
+    pol = ring_attn_policy("auto")
+    assert pol.seq_threshold == 128 and pol.max_seq_per_device == 256
+    monkeypatch.setenv("REPRO_RING_ATTN", "bogus")
+    with pytest.raises(ValueError):
+        ring_attn_policy()
+
+
+def test_ring_attention_inapplicable_returns_none():
+    q = jnp.zeros((1, 8, 2, 4))
+    kv = jnp.zeros((1, 8, 2, 4))
+    # no ambient mesh
+    assert ring_attention(q, kv, kv) is None
+    # cross-attention (Sk != Sq) under a 1-wide mesh is also a no
+    assert ring_attention(q, kv[:, :4], kv[:, :4]) is None

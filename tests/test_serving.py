@@ -337,3 +337,50 @@ def test_paged_pool_specs_shapes():
     assert set(specs) >= {"k", "v", "k_scale", "v_scale", "page_table",
                           "lengths"}
     assert len(specs["k"]) == 5 and len(specs["k_scale"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# sampling: temperature + top-k (seeded host RNG)
+# ---------------------------------------------------------------------------
+
+def test_sampling_seeded_replayable_and_topk1_greedy():
+    """Sampled decode is deterministic for a fixed (seed, trace) pair,
+    top_k=1 collapses to greedy regardless of temperature, and the
+    temperature=0 default is untouched argmax decode."""
+    from repro.launch.serve import build_engine
+
+    def serve(**kw):
+        engine, vocab = build_engine("qwen3-4b", slots=2, max_len=48,
+                                     max_new=4, **kw)
+        rng = np.random.default_rng(3)
+        for i in range(3):
+            engine.submit(rng.integers(0, vocab, 5 + 2 * i).astype(np.int32))
+        return engine.run()
+
+    greedy = serve()
+    assert serve() == greedy                       # greedy is deterministic
+    hot1 = serve(temperature=0.9, top_k=8, sample_seed=11)
+    hot2 = serve(temperature=0.9, top_k=8, sample_seed=11)
+    assert hot1 == hot2                            # same seed -> same trace
+    assert hot1.keys() == greedy.keys()
+    assert all(len(v) == 4 for v in hot1.values())
+    # top_k=1 == argmax even at high temperature
+    assert serve(temperature=5.0, top_k=1, sample_seed=7) == greedy
+
+
+def test_sampling_paged_mode_seeded():
+    """The paged engine samples through the same seeded picker (prefill
+    final token + decode ticks)."""
+    from repro.launch.serve import build_engine
+
+    def serve(seed):
+        engine, vocab = build_engine("qwen3-4b", slots=2, max_len=48,
+                                     max_new=4, kv_mode="paged", page_size=8,
+                                     temperature=0.7, top_k=4,
+                                     sample_seed=seed)
+        rng = np.random.default_rng(5)
+        for i in range(3):
+            engine.submit(rng.integers(0, vocab, 6 + i).astype(np.int32))
+        return engine.run()
+
+    assert serve(seed=2) == serve(seed=2)
