@@ -1,0 +1,150 @@
+"""Attention microbench: xla vs blocked vs Pallas trainable, fwd and
+fwd+bwd, over a causal / sliding-window / GQA shape sweep — plus the
+causal grid-pruning win (scheduled k-blocks and wall time, pruned vs
+dense schedule).
+
+On the CPU container the Pallas rows run in INTERPRET mode (an emulator:
+per-grid-step jnp dispatch), so their absolute wall time is not the TPU
+story — the compiled-Mosaic comparison is a ROADMAP open item.  What IS
+backend-independent here: the scheduled-block counts (the pair-table
+pruning), the pruned-vs-dense ratio of the SAME kernel, and the
+xla-vs-blocked XLA rows.
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)                       # compile/warm
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _mk(rng, B, S, H, Hkv, Dh, dtype=jnp.float32):
+    def arr(s):
+        return jnp.asarray(rng.normal(size=s), dtype)
+    return arr((B, S, H, Dh)), arr((B, S, Hkv, Dh)), arr((B, S, Hkv, Dh))
+
+
+def _impl_fns(causal, window):
+    """name -> fwd fn over the (B, S, H, Dh) layout."""
+    from repro.kernels import ops
+    from repro.models import layers
+
+    def xla(q, k, v):
+        return layers.attention(q, k, v, causal=causal, window=window,
+                                impl="xla")
+
+    def blocked(q, k, v):
+        return layers._attention_blocked(q, k, v, causal=causal,
+                                         window=window, q_chunk=512,
+                                         k_chunk=512)
+
+    def pallas(q, k, v):
+        o = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window)
+        return o.transpose(0, 2, 1, 3)
+
+    return {"xla": xla, "blocked": blocked, "pallas": pallas}
+
+
+def _sweep_rows(rng, cases, reps):
+    rows = []
+    for tag, (B, S, H, Hkv, Dh, causal, window) in cases.items():
+        q, k, v = _mk(rng, B, S, H, Hkv, Dh)
+        impls = _impl_fns(causal, window)
+        base_fwd = base_bwd = None
+        for name, fn in impls.items():
+            fwd = jax.jit(fn)
+            us_f = _time(fwd, q, k, v, reps=reps)
+
+            bwd = jax.jit(jax.grad(lambda q, k, v, f=fn:
+                                   (f(q, k, v).astype(jnp.float32) ** 2)
+                                   .sum(), argnums=(0, 1, 2)))
+            us_b = _time(bwd, q, k, v, reps=reps)
+            if name == "xla":
+                base_fwd, base_bwd = us_f, us_b
+            rows.append((f"attn_fwd_{name}_{tag}", us_f,
+                         f"x_xla {base_fwd / us_f:.2f}"))
+            rows.append((f"attn_fwdbwd_{name}_{tag}", us_b,
+                         f"x_xla {base_bwd / us_b:.2f}"))
+    return rows
+
+
+def _pruning_rows(rng, S, block, reps):
+    """Same Pallas kernel, pruned vs dense pair-table schedule — the
+    Eyeriss-v2-style win, measurable even in interpret mode — plus the
+    static scheduled-block counts at long S."""
+    from repro.kernels import ops
+    from repro.kernels.attention import scheduled_block_counts
+    rows = []
+    B, H, Hkv, Dh = 1, 4, 4, 64
+    q, k, v = _mk(rng, B, S, H, Hkv, Dh)
+
+    def run(prune):
+        fn = jax.jit(lambda q, k, v: ops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, block_q=block,
+            block_k=block, prune=prune))
+        return _time(fn, q, k, v, reps=reps)
+
+    us_dense = run(False)
+    us_pruned = run(True)
+    real, dense = scheduled_block_counts(S, S, block_q=block, block_k=block,
+                                         causal=True, window=None)
+    rows.append((f"attn_prune_causal_S{S}", us_pruned,
+                 f"{real}/{dense} blocks sched {dense / real:.2f}x cut "
+                 f"wall {us_dense / us_pruned:.2f}x"))
+    for Sl, w in ((32768, None), (32768, 4096)):
+        r, d = scheduled_block_counts(Sl, Sl, block_q=128, block_k=128,
+                                      causal=True, window=w)
+        tag = f"S{Sl}" + (f"_w{w}" if w else "")
+        rows.append((f"attn_sched_blocks_{tag}", 0.0,
+                     f"{r}/{d} blocks {d / r:.2f}x cut"))
+    return rows
+
+
+def main(csv: bool = True, smoke: bool = False, reps: int = 3):
+    rng = np.random.default_rng(0)
+    if smoke:
+        reps = 1
+        cases = {
+            "S256_causal": (1, 256, 4, 4, 64, True, None),
+            "S256_gqa_w64": (1, 256, 8, 2, 64, True, 64),
+        }
+        prune_S, prune_block = 512, 64
+    else:
+        cases = {
+            "S512_causal": (1, 512, 4, 4, 64, True, None),
+            "S2048_causal": (1, 2048, 4, 4, 64, True, None),
+            "S2048_gqa": (1, 2048, 8, 2, 64, True, None),
+            "S2048_w512": (1, 2048, 4, 4, 64, True, 512),
+            "S2048_full": (1, 2048, 4, 4, 64, False, None),
+            "S4096_causal": (1, 4096, 4, 4, 64, True, None),
+        }
+        prune_S, prune_block = 2048, 128
+    rows = _sweep_rows(rng, cases, reps)
+    rows += _pruning_rows(rng, prune_S, prune_block, reps)
+    if csv:
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(smoke=args.smoke)

@@ -1,9 +1,10 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows for: Table III (traffic + perf), Fig. 3 (classic rooflines),
 # Fig. 4 (exclusive workloads), the Pallas kernel micro-bench, the
-# scheduler-engine micro-bench, the serving-engine KV-mode comparison, the
-# ring-attention fwd/bwd table (§Perf B6) and the model-zoo dry-run +
-# end-to-end tables.
+# attention engine comparison (xla vs blocked vs trainable Pallas, fwd and
+# fwd+bwd, plus the causal grid-pruning win), the scheduler-engine
+# micro-bench, the serving-engine KV-mode comparison, the ring-attention
+# fwd/bwd table (§Perf B6) and the model-zoo dry-run + end-to-end tables.
 #
 # ``--smoke`` runs the CI-sized variant of every bench that has one (and
 # skips the slow kernel sweep); ``--json-out PATH`` additionally writes the
@@ -50,12 +51,13 @@ def main(argv=None) -> None:
     # Persist scheduler searches under .cache/ so repeated benchmark runs
     # start warm (see repro/core/autotune.py; delete .cache/ to reset).
     os.environ.setdefault("REPRO_SCHED_DISK_CACHE", "1")
-    from benchmarks import (bench_dryrun, bench_kernels, bench_ring,
-                            bench_roofline_fig3, bench_roofline_fig4,
-                            bench_scheduler, bench_serving, bench_table3)
+    from benchmarks import (bench_attention, bench_dryrun, bench_kernels,
+                            bench_ring, bench_roofline_fig3,
+                            bench_roofline_fig4, bench_scheduler,
+                            bench_serving, bench_table3)
     mods = [bench_scheduler, bench_table3, bench_roofline_fig3,
-            bench_roofline_fig4, bench_kernels, bench_serving, bench_ring,
-            bench_dryrun]
+            bench_roofline_fig4, bench_kernels, bench_attention,
+            bench_serving, bench_ring, bench_dryrun]
     if args.smoke:
         mods.remove(bench_kernels)   # Pallas interpret sweep: minutes on CPU
 

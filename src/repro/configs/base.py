@@ -101,6 +101,67 @@ def decide_ring(policy: RingAttnPolicy, *, seq_len: int,
     return "replicated"
 
 
+# ---------------------------------------------------------------------------
+# Trainable flash-attention policy (the fused Pallas fwd+bwd kernels)
+#
+# Mirrors RingAttnPolicy: callers resolve a policy (explicit argument >
+# REPRO_FLASH_ATTN env > default) instead of flag-flipping module state.
+# The ring policy decides HOW long sequences distribute over the mesh;
+# this one decides WHICH score-tile engine runs the local fold — the
+# Pallas trainable kernel (custom-VJP fwd+bwd, pruned grid) or the XLA
+# einsum paths.
+# ---------------------------------------------------------------------------
+
+FLASH_MODES = ("auto", "pallas", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashAttnPolicy:
+    """Which attention engine ``models.layers.attention`` dispatches to.
+
+    mode:
+      * ``auto``   — the trainable Pallas kernel on TPU for sequences at
+        least ``min_seq`` long (below it the XLA full-mask path wins on
+        launch overhead); the XLA paths on CPU/GPU backends, where Pallas
+        would run in interpret mode — an emulator, not an engine.
+      * ``pallas`` — always the trainable kernel (interpret mode off-TPU;
+        what the grad-equality tests and the microbench pin).
+      * ``xla``    — never; the pre-existing einsum/blocked paths.
+    """
+    mode: str = "auto"
+    min_seq: int = 1024
+
+
+DEFAULT_FLASH_POLICY = FlashAttnPolicy()
+
+
+def flash_attn_policy(mode_override: str | None = None) -> FlashAttnPolicy:
+    """Resolve the active flash-attention policy.  Precedence: explicit
+    ``mode_override`` (e.g. ``TransformerConfig.attn_impl``) >
+    ``REPRO_FLASH_ATTN`` env var > default; ``REPRO_FLASH_ATTN_MIN_SEQ``
+    tunes the ``auto`` threshold."""
+    mode = (mode_override or os.environ.get("REPRO_FLASH_ATTN")
+            or DEFAULT_FLASH_POLICY.mode)
+    if mode not in FLASH_MODES:
+        raise ValueError(f"flash-attention mode {mode!r} not in "
+                         f"{FLASH_MODES}")
+    ms = int(os.environ.get("REPRO_FLASH_ATTN_MIN_SEQ",
+                            DEFAULT_FLASH_POLICY.min_seq))
+    return FlashAttnPolicy(mode=mode, min_seq=ms)
+
+
+def decide_flash(policy: FlashAttnPolicy, *, seq_len: int, kv_len: int,
+                 on_tpu: bool) -> str:
+    """'pallas' (the trainable fused kernel) or 'xla' for one attention
+    call.  ``auto`` requires a real Mosaic backend and a sequence long
+    enough to amortize kernel launch + pair-table prefetch."""
+    if policy.mode != "auto":
+        return policy.mode
+    if on_tpu and max(seq_len, kv_len) >= policy.min_seq:
+        return "pallas"
+    return "xla"
+
+
 @dataclasses.dataclass
 class ArchBundle:
     arch_id: str

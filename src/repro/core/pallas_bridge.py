@@ -15,6 +15,7 @@ M/N/K) is a cache lookup, not a lattice scan.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Mapping
 
@@ -30,6 +31,10 @@ MXU = 128
 
 def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def pow2_floor(n: int) -> int:
+    return 1 << (max(1, int(n)).bit_length() - 1)
 
 
 def aligned(x: int, m: int) -> bool:
@@ -71,6 +76,38 @@ def plan_kernel(op: TensorOp, *, vmem_budget_bytes: int = 64 * 1024 * 1024,
     grid = tuple(grid_shape[name] for name in order.order)
     return KernelPlan(schedule=sched, grid_order=order, block=dict(sched.tile),
                       grid=grid, dims_order=order.order)
+
+
+@functools.lru_cache(maxsize=4096)
+def attention_block_shapes(q_len: int, kv_len: int, head_dim: int,
+                           *, vmem_budget_bytes: int = 4 * 1024 * 1024
+                           ) -> tuple[int, int]:
+    """(block_q, block_k) for a flash-attention score tile, TPU-aligned.
+
+    Runs the paper's tile search on the QK^T NDRange (head dim is the
+    temporal/streamed axis, q and s are the stationary PSum axes) instead
+    of hard-coding 128s: the per-shape result is memoized here AND behind
+    the scheduler engine's structural-key cache, so every decoder layer of
+    an LM resolves its blocks with a dict lookup.  Blocks clamp to
+    [SUBLANE, 512] x [LANE, 1024] and to the (padded) problem size —
+    the flash kernels pad ragged tails and mask them via kv_len/q_len."""
+    from .ndrange import attention_scores_op
+    q_cap = max(SUBLANE, min(512, q_len))
+    k_cap = max(LANE if kv_len >= LANE else pow2_floor(kv_len),
+                min(1024, kv_len))
+    op = attention_scores_op(1, max(q_len, SUBLANE), max(kv_len, 1),
+                             head_dim)
+    plan = plan_kernel(
+        op,
+        vmem_budget_bytes=vmem_budget_bytes,
+        psum_budget_bytes=vmem_budget_bytes // 2,
+        align={"q": SUBLANE if q_len >= SUBLANE else 1,
+               "s": LANE if kv_len >= LANE else 1},
+        caps={"h": 1, "q": q_cap, "s": k_cap},
+    )
+    bq = max(1, min(plan.block["q"], q_cap))
+    bk = max(1, min(plan.block["s"], k_cap))
+    return bq, bk
 
 
 def matmul_block_shapes(M: int, N: int, K: int,

@@ -8,11 +8,13 @@ on TPU — and (4) slices the padding back off.  ``ref.py`` holds the oracles.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.pallas_bridge import matmul_block_shapes, round_up
+from repro.core.pallas_bridge import (attention_block_shapes,
+                                      matmul_block_shapes, round_up)
 from . import attention as _attention
 from . import conv2d as _conv2d
 from . import correlation as _correlation
@@ -92,22 +94,45 @@ def correlation(i1: jax.Array, i2: jax.Array, *, radius: int,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "window", "block_q", "block_k"))
+                   static_argnames=("causal", "window", "block_q", "block_k",
+                                    "trainable", "prune"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None,
-                    block_q: int = 128, block_k: int = 128) -> jax.Array:
-    """q: (B, H, S, D), k/v: (B, Hkv, S, D) -> (B, H, S, D)."""
+                    block_q: int | None = None, block_k: int | None = None,
+                    trainable: bool = True,
+                    prune: bool = True) -> jax.Array:
+    """q: (B, H, S, D), k/v: (B, Hkv, S, D) -> (B, H, S, D).
+
+    The default path is the TRAINABLE fused kernel: forward saves only
+    (o, lse) and the backward runs the Pallas dq / dkv re-stream kernels
+    under a custom VJP (``trainable=False`` keeps the fwd-only kernel for
+    oracle sweeps).  Block shapes come from the paper's tile search
+    (``pallas_bridge.attention_block_shapes``, memoized per shape) unless
+    pinned; fully-masked k-blocks are pruned from the grid schedule
+    (``prune=False`` keeps the dense grid — the benchmark baseline)."""
     B, Hq, Sq, Dh = q.shape
     _, Hkv, Sk, _ = k.shape
+    if block_q is None or block_k is None:
+        bq, bk = attention_block_shapes(Sq, Sk, Dh)
+        block_q = block_q or bq
+        block_k = block_k or bk
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
     Sqp, Skp = round_up(Sq, block_q), round_up(Sk, block_k)
     qf = _pad_to(q, (B, Hq, Sqp, Dh)).reshape(B * Hq, Sqp, Dh)
     kf = _pad_to(k, (B, Hkv, Skp, Dh)).reshape(B * Hkv, Skp, Dh)
     vf = _pad_to(v, (B, Hkv, Skp, Dh)).reshape(B * Hkv, Skp, Dh)
-    out = _attention.flash_attention_pallas(
-        qf, kf, vf, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, interpret=_interpret())
+    if trainable:
+        spec = _attention.FlashSpec(
+            causal=causal, window=window, block_q=block_q, block_k=block_k,
+            scale=1.0 / math.sqrt(Dh), kv_len=Sk, q_len=Sq, prune=prune,
+            interpret=_interpret())
+        out = _attention.flash_attention_train(spec, qf, kf, vf)
+    else:
+        out, _ = _attention.flash_attention_fwd_pallas(
+            qf, kf, vf, causal=causal, window=window, block_q=block_q,
+            block_k=block_k, kv_len=Sk, q_len=Sq, prune=prune,
+            interpret=_interpret())
     return out.reshape(B, Hq, Sqp, Dh)[:, :, :Sq]
 
 

@@ -102,6 +102,53 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # Attention (GQA) — XLA paths for lowering; Pallas kernels are the TPU path.
 # ---------------------------------------------------------------------------
 
+def _flash_mode(S: int, Sk: int, override: str | None = None) -> str:
+    """Resolve the attention engine ('pallas' trainable kernel | 'xla')
+    for one call.  The policy lives in ``configs.base`` (explicit
+    override > REPRO_FLASH_ATTN env > default); imported lazily to keep
+    the configs<->models import order acyclic."""
+    from repro.configs import base as cbase
+    pol = cbase.flash_attn_policy(override)
+    return cbase.decide_flash(pol, seq_len=S, kv_len=Sk,
+                              on_tpu=jax.default_backend() == "tpu")
+
+
+def _flash_pallas(q, k, v, *, causal, window):
+    """Dispatch to the trainable fused Pallas kernel (custom-VJP fwd+bwd,
+    pruned grid).  Under a data-parallel mesh the call shard_maps over the
+    batch axes (attention has no cross-batch terms, so batch sharding is
+    exact); a mesh with a live ``model`` axis returns None — the
+    ring/replicated context-parallel paths own those shapes."""
+    from repro.kernels import ops as kops
+
+    def call(q, k, v):
+        o = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window)
+        return o.transpose(0, 2, 1, 3)
+
+    mesh = compat.get_abstract_mesh()
+    if mesh is None or getattr(mesh, "empty", False):
+        return call(q, k, v)
+    try:
+        if mesh._are_all_axes_manual:    # already inside a shard_map
+            return call(q, k, v)
+    except AttributeError:
+        pass
+    if "model" in mesh.axis_names and mesh.shape["model"] > 1:
+        return None
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel.ring_attention import data_axes_spec
+    dspec = data_axes_spec(mesh, q.shape[0])
+    if dspec is None:
+        return None
+    sp = P(dspec, None, None, None)
+    fn = compat.shard_map(call, mesh=mesh, in_specs=(sp, sp, sp),
+                          out_specs=sp)
+    return fn(q, k, v)
+
+
 def _ring_mode(S: int, m: int, override: str | None = None) -> str:
     """Resolve the context-parallel mode ('ring' | 'replicated' | 'off')
     for a global sequence of S on an m-wide model axis.  The policy lives
@@ -330,19 +377,29 @@ def _shard_qblocks(qb):
         qb, P(None, UC, "model", None, None))
 
 
-def attention(q, k, v, *, causal=True, window=None, impl="xla",
+def attention(q, k, v, *, causal=True, window=None, impl=None,
               full_threshold: int = 2048, q_offset: int = 0,
               ring: str | None = None):
-    """Dispatch: full-mask XLA for short seqs, context-parallel shard_map
-    (ppermute ring / replicated k/v, per the ring policy) or double-blocked
-    flash-style scan for long ones, Pallas flash kernel when requested
-    (TPU).  ``ring`` overrides the ring-policy mode for this call."""
-    if impl == "pallas":
-        from repro.kernels import ops as kops
-        o = kops.flash_attention(
-            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-            v.transpose(0, 2, 1, 3), causal=causal, window=window)
-        return o.transpose(0, 2, 1, 3)
+    """Dispatch: the trainable fused Pallas kernel when the flash policy
+    picks it (TPU auto / forced — the DEFAULT training path on real
+    hardware), else full-mask XLA for short seqs and context-parallel
+    shard_map (ppermute ring / replicated k/v, per the ring policy) or
+    double-blocked flash-style scan for long ones.  ``impl`` overrides
+    the flash policy ('pallas' | 'xla'; None/'auto' resolves via
+    REPRO_FLASH_ATTN); ``ring`` overrides the ring-policy mode."""
+    if impl in (None, "auto", "pallas", "xla"):
+        mode = _flash_mode(q.shape[1], k.shape[1],
+                           None if impl in (None, "auto") else impl)
+    else:
+        raise ValueError(f"attention impl {impl!r} not in "
+                         "(None, 'auto', 'pallas', 'xla')")
+    # the kernel wrapper masks in local positions; offset callers (chunked
+    # q against a longer kv) stay on the XLA paths, which honor q_offset
+    offset_free = isinstance(q_offset, int) and q_offset == 0
+    if mode == "pallas" and offset_free:
+        out = _flash_pallas(q, k, v, causal=causal, window=window)
+        if out is not None:
+            return out
     if max(q.shape[1], k.shape[1]) > full_threshold:
         out = _attention_ring(q, k, v, causal=causal, window=window,
                               ring=ring)
@@ -462,6 +519,10 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
     max_len) and runs a masked softmax; it is the CPU/equivalence path."""
     B, T, H, Dh = q.shape
     P, page, Hkv, _ = k_pages.shape
+    if impl in (None, "auto"):
+        # decode q is one token; the flash policy's min-seq threshold is a
+        # prefill knob, so auto here is purely a backend question
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
     if impl == "pallas" and T == 1:
         from repro.kernels import ops as kops
         o = kops.paged_flash_decode(q[:, 0], k_pages, v_pages, page_table,

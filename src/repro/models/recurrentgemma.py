@@ -43,7 +43,7 @@ class RGConfig:
     rope_theta: float = 1e4
     norm_eps: float = 1e-6
     dtype: Any = jnp.bfloat16
-    attn_impl: str = "xla"
+    attn_impl: str = "auto"           # auto | xla | pallas (flash policy)
 
     @property
     def dh(self) -> int:

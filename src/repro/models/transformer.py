@@ -47,7 +47,7 @@ class TransformerConfig:
     remat: bool = True                # per-layer activation checkpointing
     vision_tokens: int = 0            # VLM prefix length (stub frontend)
     dtype: Any = jnp.bfloat16
-    attn_impl: str = "xla"            # xla | pallas
+    attn_impl: str = "auto"           # auto | xla | pallas (flash policy)
     ring_attn: str | None = None      # context-parallel mode override
     #   (auto|ring|replicated|off); None defers to configs.base policy /
     #   REPRO_RING_ATTN — see RingAttnPolicy

@@ -35,7 +35,7 @@ class WhisperConfig:
     remat: bool = True
     norm_eps: float = 1e-5
     dtype: Any = jnp.bfloat16
-    attn_impl: str = "xla"
+    attn_impl: str = "auto"           # auto | xla | pallas (flash policy)
 
     @property
     def dh(self) -> int:

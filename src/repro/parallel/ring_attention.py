@@ -61,17 +61,48 @@ def data_axes_spec(mesh, batch: int):
 @dataclasses.dataclass(frozen=True)
 class _RingSpec:
     """Static description of one ring-attention call (hashable: it rides
-    ``custom_vjp``'s nondiff_argnums)."""
+    ``custom_vjp``'s nondiff_argnums).  ``fused`` folds each visiting
+    shard with the Pallas flash kernels (block_q/block_k tile the local
+    shard) instead of the XLA einsum chain."""
     mesh: object
     axis: str
     m: int
     causal: bool
     window: int | None
     dspec: tuple | str | None
+    fused: bool = False
+    block_q: int = 0
+    block_k: int = 0
+    interpret: bool = False
 
 
 def _hop_perm(m: int):
     return [(i, (i + 1) % m) for i in range(m)]
+
+
+def _fused_blocks(S_l: int, Dh: int) -> tuple[int, int] | None:
+    """Autotuned (block_q, block_k) snapped down to divisors of the local
+    shard, or None when the shard is too ragged to tile (-> einsum fold)."""
+    from repro.core.pallas_bridge import attention_block_shapes
+    bq, bk = attention_block_shapes(S_l, S_l, Dh)
+    while bq > 1 and S_l % bq:
+        bq //= 2
+    while bk > 1 and S_l % bk:
+        bk //= 2
+    if bq < 8 or bk < 8:
+        return None
+    return bq, bk
+
+
+def _flat_heads(x):
+    """(B, S, H, Dh) -> (B*H, S, Dh) — the kernels' head-major layout."""
+    B, S, H, Dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+
+
+def _unflat_heads(x, B):
+    BH, S, Dh = x.shape
+    return x.reshape(B, BH // B, S, Dh).transpose(0, 2, 1, 3)
 
 
 def _masked_scores(qg, kb, *, scale, q_off, k_off, causal, window):
@@ -97,9 +128,101 @@ def _masked_scores(qg, kb, *, scale, q_off, k_off, causal, window):
 # per-shard bodies
 # ---------------------------------------------------------------------------
 
+def _fused_fwd_body(spec: _RingSpec, q_l, k_l, v_l):
+    """Fold-then-permute forward where each hop's fold IS the Pallas flash
+    kernel: the hop computes the visiting shard's (o_hop, lse_hop) with
+    the band mask shifted to global positions (traced axis-index offsets
+    ride the kernel's scalar-prefetch operand), and the per-hop partials
+    combine by logsumexp algebra — the same PSum-stationary schedule, with
+    the score tile now inside the MXU kernel instead of an XLA einsum."""
+    from repro.kernels.attention import flash_attention_fwd_pallas
+    # see _fwd_body: partition-id only when a band mask data-depends on it
+    needs_pos = spec.causal or spec.window is not None
+    idx = jax.lax.axis_index(spec.axis) if needs_pos else 0
+    B, S_l, H, Dh = q_l.shape
+    Hkv = k_l.shape[2]
+    G = H // Hkv
+    qf = _flat_heads(q_l)
+    q_off = idx * S_l
+    perm = _hop_perm(spec.m)
+
+    def step(t, carry):
+        k_c, v_c, o_acc, lse = carry
+        owner = (idx - t) % spec.m if needs_pos else 0
+        o_h, lse_h = flash_attention_fwd_pallas(
+            qf, _flat_heads(k_c), _flat_heads(v_c), causal=spec.causal,
+            window=spec.window, block_q=spec.block_q, block_k=spec.block_k,
+            q_offset=q_off, k_offset=owner * S_l,
+            prune=False, interpret=spec.interpret)
+        o_h = compat.match_vma(o_h.astype(jnp.float32), qf)
+        lse_h = compat.match_vma(lse_h, qf)
+        lse_new = jnp.logaddexp(lse, lse_h)
+        o_acc = (o_acc * jnp.exp(lse - lse_new)[..., None]
+                 + o_h * jnp.exp(lse_h - lse_new)[..., None])
+        k_c = jax.lax.ppermute(k_c, spec.axis, perm)
+        v_c = jax.lax.ppermute(v_c, spec.axis, perm)
+        return (k_c, v_c, o_acc, lse_new)
+
+    vary = lambda x: compat.match_vma(x, qf)  # noqa: E731
+    st0 = (k_l, v_l,
+           vary(jnp.zeros((B * H, S_l, Dh), jnp.float32)),
+           vary(jnp.full((B * H, S_l), -1e30, jnp.float32)))
+    _, _, o_acc, lse = jax.lax.fori_loop(0, spec.m, step, st0)
+    o = _unflat_heads(o_acc, B).astype(q_l.dtype)     # (B, S_l, H, Dh)
+    return o, lse.reshape(B, Hkv, G, S_l)
+
+
+def _fused_bwd_body(spec: _RingSpec, q_l, k_l, v_l, o_l, lse_l, do_l):
+    """Second ring pass with the Pallas backward kernels doing each hop's
+    re-stream: dq folds locally, dk/dv accumulators ride the ring with
+    their shards (all f32 until the final cast)."""
+    from repro.kernels.attention import flash_attention_bwd_pallas
+    needs_pos = spec.causal or spec.window is not None
+    idx = jax.lax.axis_index(spec.axis) if needs_pos else 0
+    B, S_l, H, Dh = q_l.shape
+    Hkv = k_l.shape[2]
+    f32 = jnp.float32
+    qf = _flat_heads(q_l)
+    dof = _flat_heads(do_l)
+    of = _flat_heads(o_l)
+    lsef = lse_l.reshape(B, H, S_l).reshape(B * H, S_l)
+    delta = jnp.sum(of.astype(f32) * dof.astype(f32), axis=-1)
+    q_off = idx * S_l
+    perm = _hop_perm(spec.m)
+
+    def step(t, carry):
+        k_c, v_c, dk_c, dv_c, dq = carry
+        owner = (idx - t) % spec.m if needs_pos else 0
+        dq_h, dk_h, dv_h = flash_attention_bwd_pallas(
+            qf, _flat_heads(k_c), _flat_heads(v_c), dof, lsef, delta,
+            causal=spec.causal, window=spec.window, block_q=spec.block_q,
+            block_k=spec.block_k, q_offset=q_off,
+            k_offset=owner * S_l, prune=False,
+            interpret=spec.interpret)
+        dq = dq + compat.match_vma(dq_h, qf)
+        dk_c = dk_c + _unflat_heads(compat.match_vma(dk_h, qf), B)
+        dv_c = dv_c + _unflat_heads(compat.match_vma(dv_h, qf), B)
+        k_c = jax.lax.ppermute(k_c, spec.axis, perm)
+        v_c = jax.lax.ppermute(v_c, spec.axis, perm)
+        dk_c = jax.lax.ppermute(dk_c, spec.axis, perm)
+        dv_c = jax.lax.ppermute(dv_c, spec.axis, perm)
+        return (k_c, v_c, dk_c, dv_c, dq)
+
+    vary = lambda x: compat.match_vma(x, qf)  # noqa: E731
+    st0 = (k_l, v_l,
+           vary(jnp.zeros((B, S_l, Hkv, Dh), f32)),
+           vary(jnp.zeros((B, S_l, Hkv, Dh), f32)),
+           vary(jnp.zeros((B * H, S_l, Dh), f32)))
+    _, _, dk, dv, dq = jax.lax.fori_loop(0, spec.m, step, st0)
+    dq = _unflat_heads(dq, B).astype(q_l.dtype)       # (B, S_l, H, Dh)
+    return dq, dk.astype(k_l.dtype), dv.astype(v_l.dtype)
+
+
 def _fwd_body(spec: _RingSpec, q_l, k_l, v_l):
     """Fold-then-permute forward.  Returns (o, lse); lse is f32
     (B, Hkv, G, S/m) — the only extra residual the VJP keeps."""
+    if spec.fused:
+        return _fused_fwd_body(spec, q_l, k_l, v_l)
     # axis_index only when a band mask exists: with no mask nothing data-
     # depends on it, and XLA's SPMD partitioner rejects a partition-id it
     # cannot infer as manually sharded.
@@ -156,6 +279,8 @@ def _bwd_body(spec: _RingSpec, q_l, k_l, v_l, o_l, lse_l, do_l):
     """Second ring pass: recompute each visiting shard's tile, fold dq
     locally, circulate dk/dv with the shards.  After m hops the
     accumulators are home — no psum."""
+    if spec.fused:
+        return _fused_bwd_body(spec, q_l, k_l, v_l, o_l, lse_l, do_l)
     needs_pos = spec.causal or spec.window is not None
     idx = jax.lax.axis_index(spec.axis) if needs_pos else 0
     B, S_l, H, Dh = q_l.shape
@@ -247,8 +372,29 @@ _ring_attn.defvjp(_ring_attn_fwd, _ring_attn_bwd)
 # public entry
 # ---------------------------------------------------------------------------
 
+def _decide_fused(fused: bool | None, S_global: int, S_local: int, Dh: int):
+    """Resolve the per-hop fold engine: explicit ``fused`` wins, else the
+    flash policy (REPRO_FLASH_ATTN / backend) judged on the GLOBAL
+    sequence (the ring still folds all of it, one shard per hop).
+    Returns (fused, block_q, block_k, interpret); fused falls off when
+    the local shard won't tile."""
+    interpret = jax.default_backend() != "tpu"
+    if fused is None:
+        from repro.configs import base as cbase
+        fused = cbase.decide_flash(cbase.flash_attn_policy(None),
+                                   seq_len=S_global, kv_len=S_global,
+                                   on_tpu=not interpret) == "pallas"
+    if not fused:
+        return False, 0, 0, interpret
+    blocks = _fused_blocks(S_local, Dh)
+    if blocks is None:
+        return False, 0, 0, interpret
+    return True, blocks[0], blocks[1], interpret
+
+
 def ring_attention(q, k, v, *, causal=True, window=None, mesh=None,
-                   axis: str = "model", impl: str = "vjp"):
+                   axis: str = "model", impl: str = "vjp",
+                   fused: bool | None = None):
     """Context-parallel attention on the ppermute ring.
 
     q: (B, S, H, Dh); k/v: (B, S, Hkv, Dh) with H % Hkv == 0 (GQA).
@@ -256,7 +402,9 @@ def ring_attention(q, k, v, *, causal=True, window=None, mesh=None,
     apply (no ambient/explicit mesh, axis absent or size 1, S does not
     divide the ring, cross-attention).  ``impl``: "vjp" (memory-flat
     custom VJP, the default) or "naive" (reverse-differentiated fold —
-    benchmark baseline only).
+    benchmark baseline only).  ``fused`` selects the Pallas flash kernels
+    for the per-hop score-tile fold in BOTH ring passes (None: follow the
+    flash policy — on by default on TPU).
     """
     if mesh is None:
         mesh = compat.get_abstract_mesh()
@@ -273,9 +421,11 @@ def ring_attention(q, k, v, *, causal=True, window=None, mesh=None,
     B, S, H, Dh = q.shape
     if S % m != 0 or k.shape[1] != S:
         return None
+    use_fused, bq, bk, interp = _decide_fused(fused, S, S // m, Dh)
     spec = _RingSpec(mesh=mesh, axis=axis, m=m, causal=bool(causal),
                      window=None if window is None else int(window),
-                     dspec=data_axes_spec(mesh, B))
+                     dspec=data_axes_spec(mesh, B), fused=use_fused,
+                     block_q=bq, block_k=bk, interpret=interp)
     if impl == "naive":
         qs = _qkv_spec(spec)
         fn = compat.shard_map(

@@ -1,0 +1,261 @@
+"""Trainable fused flash attention: Pallas VJP vs the XLA reference
+(interpret mode), the pruned pair-table schedule, the flash policy, and
+the default-path dispatch (the kernel appears in the jaxpr iff the policy
+says so)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (DEFAULT_FLASH_POLICY, FlashAttnPolicy,
+                                decide_flash, flash_attn_policy)
+from repro.kernels import attention as katt
+from repro.kernels import ops, ref
+from repro.models import layers
+
+RNG = np.random.default_rng(7)
+
+
+def _arr(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32), dtype)
+
+
+def _ref_loss(q, k, v, *, causal, window):
+    B, H, S, Dh = q.shape
+    Hkv = k.shape[1]
+    o = ref.attention_ref(q.reshape(B * H, S, Dh),
+                          k.reshape(B * Hkv, S, Dh),
+                          v.reshape(B * Hkv, S, Dh),
+                          causal=causal, window=window)
+    return (o.astype(jnp.float32) ** 2).sum()
+
+
+def _pal_loss(q, k, v, *, causal, window, block=8):
+    o = ops.flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block, block_k=block)
+    return (o.astype(jnp.float32) ** 2).sum()
+
+
+# ---------------------------------------------------------------------------
+# Grad equality: Pallas VJP dq/dk/dv vs XLA autodiff of the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 8), (False, 8)])
+def test_vjp_grads_match_xla(causal, window):
+    B, H, Hkv, S, Dh = 2, 4, 4, 24, 16   # ragged S: exercises padding
+    q, k, v = _arr((B, H, S, Dh)), _arr((B, Hkv, S, Dh)), _arr((B, Hkv, S,
+                                                                Dh))
+    gr = jax.grad(lambda *a: _ref_loss(*a, causal=causal, window=window),
+                  argnums=(0, 1, 2))(q, k, v)
+    gp = jax.grad(lambda *a: _pal_loss(*a, causal=causal, window=window),
+                  argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("q k v".split(), gr, gp):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=2e-4,
+                                   atol=2e-4, err_msg=f"d{name}")
+
+
+def test_vjp_grads_match_xla_gqa():
+    B, H, Hkv, S, Dh = 2, 8, 2, 32, 16
+    q, k, v = _arr((B, H, S, Dh)), _arr((B, Hkv, S, Dh)), _arr((B, Hkv, S,
+                                                                Dh))
+    gr = jax.grad(lambda *a: _ref_loss(*a, causal=True, window=None),
+                  argnums=(0, 1, 2))(q, k, v)
+    gp = jax.grad(lambda *a: _pal_loss(*a, causal=True, window=None),
+                  argnums=(0, 1, 2))(q, k, v)
+    for name, a, b in zip("q k v".split(), gr, gp):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=2e-4,
+                                   atol=2e-4, err_msg=f"d{name}")
+
+
+def test_fwd_saves_only_o_and_lse():
+    """The VJP residual contract: no (Sq, Sk) score buffer survives the
+    forward — residuals are q/k/v plus (o, lse) only."""
+    B, H, S, Dh = 1, 2, 32, 8
+    q, k, v = _arr((B, H, S, Dh)), _arr((B, H, S, Dh)), _arr((B, H, S, Dh))
+
+    def loss(q, k, v):
+        return _pal_loss(q, k, v, causal=True, window=None)
+
+    # linearize runs the custom-vjp fwd rule; its jaxpr must not carry a
+    # (BH, S, S)-sized tensor
+    jaxpr = jax.make_jaxpr(lambda *a: jax.linearize(loss, *a)[0])(q, k, v)
+    big = B * H * S * S
+    for eqn_var in jaxpr.jaxpr.outvars:
+        assert np.prod(eqn_var.aval.shape, initial=1) < big
+
+
+# ---------------------------------------------------------------------------
+# Pair-table schedule (the pruned grid)
+# ---------------------------------------------------------------------------
+
+def test_causal_pruning_halves_schedule():
+    real, dense = katt.scheduled_block_counts(
+        4096, 4096, block_q=128, block_k=128, causal=True, window=None)
+    nq = 4096 // 128
+    assert real == nq * (nq + 1) // 2          # exact lower triangle
+    assert dense / real > 1.9                  # ~2x at long S
+
+
+def test_window_pruning_is_banded():
+    real, dense = katt.scheduled_block_counts(
+        8192, 8192, block_q=128, block_k=128, causal=True, window=1024)
+    # each row touches at most ceil(window/bk)+1 columns (+ the diagonal)
+    assert real <= (8192 // 128) * (1024 // 128 + 2)
+    assert dense / real > 6
+
+
+def test_padded_kv_blocks_never_scheduled():
+    # kv_len masks the padded tail: blocks wholly past kv_len drop out
+    tbl, real = katt._pair_schedule(4, 4, 8, 8, False, None, 17, 32, "row")
+    assert real == 4 * 3                       # k blocks 0..2 only
+    assert int(tbl[:, 1].max()) == 2
+
+
+def test_nonzero_offsets_fall_back_to_dense_schedule():
+    """The pruned schedule is built in LOCAL positions: a nonzero static
+    offset shifts the band, so pruning must disable itself (review
+    regression — pruning with q_offset once dropped live k-blocks)."""
+    B, H, S, Dh = 1, 2, 64, 8
+    q = _arr((B * H, S, Dh))
+    k, v = _arr((B * H, S, Dh)), _arr((B * H, S, Dh))
+    # q rows globally at [64, 128): with causal they attend ALL 64 keys
+    o_p, _ = katt.flash_attention_fwd_pallas(
+        q, k, v, causal=True, block_q=8, block_k=8, q_offset=S, k_offset=0,
+        prune=True, interpret=True)
+    o_d, _ = katt.flash_attention_fwd_pallas(
+        q, k, v, causal=True, block_q=8, block_k=8, q_offset=S, k_offset=0,
+        prune=False, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_d), rtol=1e-6,
+                               atol=1e-6)
+    r = ref.attention_ref(q, k, v, causal=False)   # all keys visible
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(r), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_attention_q_offset_stays_on_xla_path(monkeypatch):
+    """layers.attention with a nonzero q_offset must not dispatch to the
+    kernel (its wrapper masks in local positions)."""
+    B, S, H, Dh = 1, 16, 2, 8
+    q, k, v = _arr((B, S, H, Dh)), _arr((B, S, H, Dh)), _arr((B, S, H, Dh))
+    monkeypatch.setenv("REPRO_FLASH_ATTN", "pallas")
+    jx = str(jax.make_jaxpr(
+        lambda q, k, v: layers.attention(q, k, v, causal=True,
+                                         q_offset=32))(q, k, v))
+    assert "pallas_call" not in jx
+
+
+def test_pruned_vs_dense_same_numbers():
+    B, H, S, Dh = 1, 2, 40, 8
+    q, k, v = _arr((B, H, S, Dh)), _arr((B, H, S, Dh)), _arr((B, H, S, Dh))
+    o_p = ops.flash_attention(q, k, v, causal=True, window=8, block_q=8,
+                              block_k=8, prune=True)
+    o_d = ops.flash_attention(q, k, v, causal=True, window=8, block_q=8,
+                              block_k=8, prune=False)
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_d), rtol=1e-6,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Policy + default-path dispatch
+# ---------------------------------------------------------------------------
+
+def test_flash_policy_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_FLASH_ATTN", raising=False)
+    assert flash_attn_policy().mode == "auto"
+    monkeypatch.setenv("REPRO_FLASH_ATTN", "pallas")
+    assert flash_attn_policy().mode == "pallas"
+    assert flash_attn_policy("xla").mode == "xla"   # explicit beats env
+    monkeypatch.setenv("REPRO_FLASH_ATTN_MIN_SEQ", "64")
+    assert flash_attn_policy("auto").min_seq == 64
+    monkeypatch.setenv("REPRO_FLASH_ATTN", "bogus")
+    with pytest.raises(ValueError):
+        flash_attn_policy()
+
+
+def test_decide_flash_auto():
+    pol = DEFAULT_FLASH_POLICY
+    assert decide_flash(pol, seq_len=4096, kv_len=4096, on_tpu=True) == \
+        "pallas"
+    # CPU backend: interpret mode is an emulator, not a fast path
+    assert decide_flash(pol, seq_len=4096, kv_len=4096, on_tpu=False) == \
+        "xla"
+    # short sequences don't amortize the launch
+    assert decide_flash(pol, seq_len=256, kv_len=256, on_tpu=True) == "xla"
+    assert decide_flash(FlashAttnPolicy(mode="pallas"), seq_len=8,
+                        kv_len=8, on_tpu=False) == "pallas"
+
+
+def _attn_jaxpr(q, k, v, impl):
+    return str(jax.make_jaxpr(
+        lambda q, k, v: layers.attention(q, k, v, causal=True, impl=impl))(
+            q, k, v))
+
+
+def test_default_path_dispatches_iff_policy(monkeypatch):
+    """The kernel shows up in the lowered jaxpr exactly when the policy
+    picks it: env force-on, env force-off, and per-call override."""
+    B, S, H, Dh = 1, 32, 2, 8
+    q = _arr((B, S, H, Dh))
+    k, v = _arr((B, S, H, Dh)), _arr((B, S, H, Dh))
+    monkeypatch.setenv("REPRO_FLASH_ATTN", "pallas")
+    assert "pallas_call" in _attn_jaxpr(q, k, v, None)
+    monkeypatch.setenv("REPRO_FLASH_ATTN", "xla")
+    assert "pallas_call" not in _attn_jaxpr(q, k, v, None)
+    # explicit impl overrides the env in both directions
+    assert "pallas_call" in _attn_jaxpr(q, k, v, "pallas")
+    monkeypatch.setenv("REPRO_FLASH_ATTN", "pallas")
+    assert "pallas_call" not in _attn_jaxpr(q, k, v, "xla")
+    # auto on the CPU container resolves to the XLA paths
+    monkeypatch.delenv("REPRO_FLASH_ATTN", raising=False)
+    assert "pallas_call" not in _attn_jaxpr(q, k, v, None)
+
+
+def test_policy_path_values_and_grads_match(monkeypatch):
+    B, S, H, Dh = 2, 32, 4, 16
+    q, k, v = _arr((B, S, H, Dh)), _arr((B, S, H, Dh)), _arr((B, S, H, Dh))
+
+    def loss(q, k, v):
+        return (layers.attention(q, k, v, causal=True).astype(jnp.float32)
+                ** 2).sum()
+
+    monkeypatch.setenv("REPRO_FLASH_ATTN", "xla")
+    vx, gx = jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+    monkeypatch.setenv("REPRO_FLASH_ATTN", "pallas")
+    vp, gp = jax.value_and_grad(loss, argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(float(vp), float(vx), rtol=1e-5)
+    for a, b in zip(gx, gp):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a), rtol=2e-4,
+                                   atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: flash_decode must survive caches that don't divide block_k
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("S,block_k", [(100, 512), (37, 64), (300, 512)])
+def test_flash_decode_short_cache(S, block_k):
+    B, G, Dh = 3, 4, 16
+    q = _arr((B, G, Dh))
+    kc, vc = _arr((B, S, Dh)), _arr((B, S, Dh))
+    lens = jnp.asarray([S, max(1, S // 3), 1], jnp.int32)
+    out = katt.flash_decode_pallas(q, kc, vc, lens, block_k=block_k,
+                                   interpret=True)
+    s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32),
+                   kc.astype(jnp.float32)) / np.sqrt(Dh)
+    mask = jnp.arange(S)[None, None, :] < lens[:, None, None]
+    p = jax.nn.softmax(jnp.where(mask, s, -jnp.inf), axis=-1)
+    r = jnp.einsum("bgs,bsd->bgd", p, vc.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ops_flash_decode_ragged_cache():
+    B, H, Hkv, S, Dh = 2, 4, 2, 100, 16
+    q = _arr((B, H, Dh))
+    kc, vc = _arr((B, Hkv, S, Dh)), _arr((B, Hkv, S, Dh))
+    lens = jnp.asarray([100, 55], jnp.int32)
+    out = ops.flash_decode(q, kc, vc, lens)    # default block_k=512 > S
+    assert out.shape == (B, H, Dh)
+    assert bool(jnp.all(jnp.isfinite(out)))

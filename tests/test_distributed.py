@@ -344,3 +344,40 @@ assert any(s.is_fully_replicated is False for s in shardings.values()), sharding
 assert out == ref, (out, ref)
 print("paged pool sharded ok")
 """)
+
+
+def test_ring_fused_pallas_hop_matches_einsum():
+    """The fused per-hop fold (Pallas flash kernels inside both ring
+    passes, traced axis-index offsets through the scalar-prefetch
+    operand) is numerically the einsum fold: outputs and dq/dk/dv grads
+    match for causal, windowed and GQA cases on the 8-device host mesh
+    (interpret mode — the compiled-Mosaic run is a ROADMAP item)."""
+    _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.runtime import compat
+from repro.parallel.ring_attention import ring_attention
+mesh = compat.make_mesh((2, 4), ("data", "model"))
+key = jax.random.PRNGKey(3)
+cases = [
+    (2, 64, 4, 4, 16, True, None),    # MHA causal
+    (2, 64, 8, 2, 16, True, 24),      # GQA + sliding window
+    (2, 64, 4, 2, 8, False, None),    # non-causal GQA
+]
+for B, S, H, Hkv, Dh, causal, window in cases:
+    q = jax.random.normal(key, (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, Dh), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, Dh), jnp.float32)
+    def loss(q, k, v, fused):
+        return (ring_attention(q, k, v, causal=causal, window=window, fused=fused).astype(jnp.float32) ** 2).sum()
+    with compat.set_mesh(mesh):
+        o_e = jax.jit(lambda q, k, v: ring_attention(q, k, v, causal=causal, window=window, fused=False))(q, k, v)
+        o_f = jax.jit(lambda q, k, v: ring_attention(q, k, v, causal=causal, window=window, fused=True))(q, k, v)
+        g_e = jax.jit(jax.grad(lambda q, k, v: loss(q, k, v, False), argnums=(0, 1, 2)))(q, k, v)
+        g_f = jax.jit(jax.grad(lambda q, k, v: loss(q, k, v, True), argnums=(0, 1, 2)))(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_f), np.asarray(o_e), rtol=3e-4, atol=3e-4)
+    for a, b, nm in zip(g_f, g_e, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-4,
+                                   err_msg=f"d{nm} causal={causal} window={window}")
+    print("ok", B, S, H, Hkv, causal, window)
+print("fused ring hop matches einsum fold")
+""")
