@@ -1,5 +1,8 @@
-from .manager import (CheckpointManager, latest_step, restore_checkpoint,
-                      save_checkpoint)
+from .manager import (CheckpointCorruptError, CheckpointError,
+                      CheckpointManager, TreeStructureError, latest_step,
+                      restore_checkpoint, save_checkpoint, verified_steps,
+                      verify_checkpoint)
 
-__all__ = ["CheckpointManager", "latest_step", "restore_checkpoint",
-           "save_checkpoint"]
+__all__ = ["CheckpointCorruptError", "CheckpointError", "CheckpointManager",
+           "TreeStructureError", "latest_step", "restore_checkpoint",
+           "save_checkpoint", "verified_steps", "verify_checkpoint"]

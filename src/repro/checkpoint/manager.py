@@ -1,13 +1,38 @@
-"""Fault-tolerant sharded checkpointing.
+"""Fault-tolerant sharded checkpointing with verified restores (format v2).
 
-Format: one directory per step, one .npz per host shard plus a JSON
-manifest; writes go to a temp dir and are atomically renamed, so a crash
-mid-save never corrupts the latest checkpoint. Saves run on a background
-thread (async): the train loop hands over host-local numpy copies and keeps
-stepping. Restore re-shards to WHATEVER mesh is现 available (elastic): the
-manifest stores the logical tree structure; arrays are loaded full and
-re-placed with whatever sharding the new mesh dictates (at 1000-node scale,
-substitute a striped read; the interface is unchanged).
+Layout: one SHARED directory per step that every host writes into::
+
+    step_00000040/
+        shard_0.npz       one .npz per host (tmp-file + atomic rename)
+        commit_0.json     per-host commit marker: CRC32 + leaf count
+        ...
+        manifest.json     final commit, written by host 0 (tmp + rename):
+                          treedef, leaf paths/shapes/dtypes, n_hosts
+
+A checkpoint only EXISTS once its manifest is on disk, and it is only
+INTACT when every shard named by the manifest is present with a CRC32
+matching its commit marker — a crash mid-save leaves an invisible partial
+dir, a flipped bit leaves a detectably-corrupt one.  ``restore`` walks
+steps newest-to-oldest and falls back to the newest intact checkpoint, so
+a corrupted latest save costs one checkpoint interval, not the run.
+
+(The seed format renamed a per-host tmp DIR over the step dir, so on a
+multi-host fleet each host's rename deleted every other host's shard —
+host shards now land in one shared dir and commit individually.  In a
+real multi-host job the host-0 manifest commit happens after a barrier;
+in this single-process container callers just save host 0 last.)
+
+Saves run on a background thread (async): the train loop hands over
+host-local numpy copies and keeps stepping.  Restore re-shards to
+whatever mesh is available (elastic): arrays are loaded full and re-placed
+by ``sharding_fn`` (at 1000-node scale, substitute a striped read; the
+interface is unchanged).
+
+Error contract: :class:`CheckpointCorruptError` means "this step is
+damaged, try an older one" (the manager's fallback does exactly that);
+:class:`TreeStructureError` means the CALLER's ``like`` tree disagrees
+with what was saved — that is a bug, never silently absorbed, and the
+error names the first diverging leaf path.
 """
 from __future__ import annotations
 
@@ -15,70 +40,214 @@ import json
 import os
 import shutil
 import threading
+import zlib
+from itertools import zip_longest
 from typing import Any, Callable
 
 import jax
 import numpy as np
 
+FORMAT_VERSION = 2
 
-def _flatten(tree: Any) -> tuple[list[np.ndarray], Any, list[str]]:
-    leaves, treedef = jax.tree.flatten(tree)
-    names = [f"leaf_{i}" for i in range(len(leaves))]
-    return leaves, treedef, names
+
+class CheckpointError(Exception):
+    """Base class for checkpoint failures."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """Step is missing pieces or fails its checksums; fall back."""
+
+
+class TreeStructureError(CheckpointError):
+    """`like` and the saved tree disagree structurally; caller bug."""
+
+
+def _leaf_paths(tree: Any) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(path) for path, _ in flat]
+
+
+def _crc32_file(path: str) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            crc = zlib.crc32(chunk, crc)
+    return crc
+
+
+def _write_json_atomic(path: str, obj: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)
+
+
+def _step_dir(path: str, step: int) -> str:
+    return os.path.join(path, f"step_{step:08d}")
 
 
 def save_checkpoint(path: str, step: int, tree: Any, *, host_id: int = 0,
-                    extra: dict | None = None) -> str:
-    """Synchronous sharded save with atomic rename."""
-    step_dir = os.path.join(path, f"step_{step:08d}")
-    tmp_dir = step_dir + f".tmp_{host_id}"
-    os.makedirs(tmp_dir, exist_ok=True)
-    leaves, treedef, names = _flatten(tree)
-    arrays = {n: np.asarray(l) for n, l in zip(names, leaves)}
-    np.savez(os.path.join(tmp_dir, f"shard_{host_id}.npz"), **arrays)
-    manifest = {
-        "step": step,
-        "treedef": str(treedef),
-        "n_leaves": len(leaves),
-        "shapes": [list(np.shape(l)) for l in leaves],
-        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
-    # single-host container: the tmp dir becomes the step dir atomically
-    if os.path.isdir(step_dir):
-        shutil.rmtree(step_dir)
-    os.replace(tmp_dir, step_dir)
+                    n_hosts: int = 1, extra: dict | None = None) -> str:
+    """Write this host's shard (and, on host 0, the committing manifest).
+
+    Every file lands via tmp-write + ``os.replace`` so readers never see a
+    half-written shard; the shared step dir is created idempotently so
+    concurrent hosts cannot clobber each other's shards.
+    """
+    step_dir = _step_dir(path, step)
+    os.makedirs(step_dir, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    shard = os.path.join(step_dir, f"shard_{host_id}.npz")
+    tmp = shard + ".tmp"
+    with open(tmp, "wb") as f:      # file handle: savez must not append .npz
+        np.savez(f, **arrays)
+    crc = _crc32_file(tmp)
+    os.replace(tmp, shard)
+    _write_json_atomic(os.path.join(step_dir, f"commit_{host_id}.json"),
+                       {"host_id": host_id, "crc32": crc,
+                        "n_leaves": len(leaves)})
+    if host_id == 0:
+        manifest = {
+            "format": FORMAT_VERSION,
+            "step": step,
+            "n_hosts": n_hosts,
+            "treedef": str(treedef),
+            "leaf_paths": _leaf_paths(tree),
+            "n_leaves": len(leaves),
+            "shapes": [list(np.shape(l)) for l in leaves],
+            "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+            "extra": extra or {},
+        }
+        _write_json_atomic(os.path.join(step_dir, "manifest.json"), manifest)
     return step_dir
 
 
-def latest_step(path: str) -> int | None:
+def _read_manifest(step_dir: str) -> dict:
+    mpath = os.path.join(step_dir, "manifest.json")
+    if not os.path.isfile(mpath):
+        raise CheckpointCorruptError(f"{step_dir}: no manifest (save never "
+                                     "committed)")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(f"{step_dir}: unreadable manifest: {e}")
+    if manifest.get("format") != FORMAT_VERSION:
+        raise CheckpointCorruptError(
+            f"{step_dir}: unsupported format {manifest.get('format')!r}")
+    return manifest
+
+
+def verify_checkpoint(path: str, step: int) -> tuple[bool, str]:
+    """Full integrity audit of one step: manifest present, every shard the
+    manifest names present, each shard's CRC32 matching its commit marker
+    and its leaf count matching the manifest.  Returns (ok, reason)."""
+    step_dir = _step_dir(path, step)
+    try:
+        manifest = _read_manifest(step_dir)
+    except CheckpointCorruptError as e:
+        return False, str(e)
+    for h in range(manifest.get("n_hosts", 1)):
+        shard = os.path.join(step_dir, f"shard_{h}.npz")
+        marker = os.path.join(step_dir, f"commit_{h}.json")
+        if not os.path.isfile(shard):
+            return False, f"shard {h} missing"
+        if not os.path.isfile(marker):
+            return False, f"shard {h} never committed"
+        try:
+            with open(marker) as f:
+                commit = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            return False, f"shard {h} commit marker unreadable: {e}"
+        if commit.get("n_leaves") != manifest["n_leaves"]:
+            return False, (f"shard {h} has {commit.get('n_leaves')} leaves, "
+                           f"manifest says {manifest['n_leaves']}")
+        crc = _crc32_file(shard)
+        if crc != commit.get("crc32"):
+            return False, (f"shard {h} CRC32 {crc:#010x} != committed "
+                           f"{commit.get('crc32', 0):#010x}")
+    return True, "ok"
+
+
+def _all_steps(path: str) -> list[int]:
     if not os.path.isdir(path):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(path)
-             if d.startswith("step_") and not d.endswith(".tmp")
-             and "tmp" not in d]
+        return []
+    return sorted(int(d.split("_")[1]) for d in os.listdir(path)
+                  if d.startswith("step_") and "tmp" not in d)
+
+
+def latest_step(path: str) -> int | None:
+    """Newest step whose manifest committed (cheap; no CRC pass — restore
+    verifies fully and falls back on damage)."""
+    steps = [s for s in _all_steps(path)
+             if os.path.isfile(os.path.join(_step_dir(path, s),
+                                            "manifest.json"))]
     return max(steps) if steps else None
+
+
+def verified_steps(path: str) -> list[int]:
+    """All steps passing the full CRC audit, oldest first."""
+    return [s for s in _all_steps(path) if verify_checkpoint(path, s)[0]]
+
+
+def _check_structure(step: int, manifest: dict, like: Any) -> Any:
+    """Raise TreeStructureError naming the first diverging leaf path when
+    `like` does not match the saved tree; returns like's treedef."""
+    leaves, treedef = jax.tree.flatten(like)
+    if (manifest["n_leaves"] == len(leaves)
+            and manifest["treedef"] == str(treedef)):
+        return treedef
+    saved_paths = manifest.get("leaf_paths", [])
+    for i, (a, b) in enumerate(zip_longest(saved_paths, _leaf_paths(like),
+                                           fillvalue="<missing>")):
+        if a != b:
+            raise TreeStructureError(
+                f"checkpoint step {step}: saved tree and restore target "
+                f"diverge at leaf {i}: checkpoint has {a!r}, `like` has "
+                f"{b!r}")
+    raise TreeStructureError(
+        f"checkpoint step {step}: treedef mismatch with identical leaf "
+        f"paths (container types differ): saved {manifest['treedef']!r} "
+        f"vs {str(treedef)!r}")
 
 
 def restore_checkpoint(path: str, step: int, like: Any, *,
                        host_id: int = 0,
-                       sharding_fn: Callable[[Any], Any] | None = None) -> Any:
-    """Restore into the structure of `like`; re-shard with `sharding_fn`
-    (elastic: the target mesh may differ from the one that saved)."""
-    step_dir = os.path.join(path, f"step_{step:08d}")
-    with open(os.path.join(step_dir, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(step_dir, f"shard_{host_id}.npz"))
-    leaves, treedef = jax.tree.flatten(like)
-    assert manifest["n_leaves"] == len(leaves), (
-        manifest["n_leaves"], len(leaves))
+                       sharding_fn: Callable[[Any], Any] | None = None,
+                       verify: bool = True) -> Any:
+    """Verified restore into the structure of `like`; re-shard with
+    `sharding_fn` (elastic: the target mesh may differ from the one that
+    saved).  Raises CheckpointCorruptError on damage (fallback-able) and
+    TreeStructureError on a `like` mismatch (not fallback-able)."""
+    step_dir = _step_dir(path, step)
+    if verify:
+        ok, why = verify_checkpoint(path, step)
+        if not ok:
+            raise CheckpointCorruptError(f"step {step}: {why}")
+    manifest = _read_manifest(step_dir)
+    leaves = jax.tree.leaves(like)
+    treedef = _check_structure(step, manifest, like)
+    try:
+        data = np.load(os.path.join(step_dir, f"shard_{host_id}.npz"))
+    except Exception as e:  # zipfile/zlib raise various types on damage
+        raise CheckpointCorruptError(f"step {step}: shard {host_id} "
+                                     f"unreadable: {e}")
     out = []
     for i, leaf in enumerate(leaves):
         arr = data[f"leaf_{i}"]
-        assert list(arr.shape) == list(np.shape(leaf)), (
-            f"leaf {i}: ckpt {arr.shape} vs model {np.shape(leaf)}")
+        if list(arr.shape) != manifest["shapes"][i] or \
+                str(arr.dtype) != manifest["dtypes"][i]:
+            raise CheckpointCorruptError(
+                f"step {step}: leaf {i} is {arr.dtype}{list(arr.shape)}, "
+                f"manifest recorded {manifest['dtypes'][i]}"
+                f"{manifest['shapes'][i]}")
+        if list(arr.shape) != list(np.shape(leaf)):
+            raise TreeStructureError(
+                f"step {step}: leaf {i} "
+                f"({manifest.get('leaf_paths', ['?'] * (i + 1))[i]}): "
+                f"checkpoint shape {list(arr.shape)} vs restore target "
+                f"{list(np.shape(leaf))}")
         out.append(arr)
     tree = jax.tree.unflatten(treedef, out)
     if sharding_fn is not None:
@@ -87,12 +256,15 @@ def restore_checkpoint(path: str, step: int, like: Any, *,
 
 
 class CheckpointManager:
-    """Async checkpointing with bounded retention + restart discovery."""
+    """Async checkpointing with bounded retention, restart discovery and
+    verified-restore fallback."""
 
-    def __init__(self, path: str, *, keep: int = 3, host_id: int = 0):
+    def __init__(self, path: str, *, keep: int = 3, host_id: int = 0,
+                 n_hosts: int = 1):
         self.path = path
         self.keep = keep
         self.host_id = host_id
+        self.n_hosts = n_hosts
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
         os.makedirs(path, exist_ok=True)
@@ -106,7 +278,8 @@ class CheckpointManager:
         def work():
             try:
                 save_checkpoint(self.path, step, host_tree,
-                                host_id=self.host_id, extra=extra)
+                                host_id=self.host_id, n_hosts=self.n_hosts,
+                                extra=extra)
                 self._gc()
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
@@ -123,21 +296,31 @@ class CheckpointManager:
             raise err
 
     def _gc(self):
-        steps = sorted(
-            int(d.split("_")[1]) for d in os.listdir(self.path)
-            if d.startswith("step_") and "tmp" not in d)
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.path, f"step_{s:08d}"),
-                          ignore_errors=True)
+        for s in _all_steps(self.path)[:-self.keep]:
+            shutil.rmtree(_step_dir(self.path, s), ignore_errors=True)
 
     def latest(self) -> int | None:
         return latest_step(self.path)
 
     def restore(self, like: Any, step: int | None = None,
                 sharding_fn=None) -> tuple[int, Any] | None:
-        step = step if step is not None else self.latest()
-        if step is None:
-            return None
-        return step, restore_checkpoint(self.path, step, like,
-                                        host_id=self.host_id,
-                                        sharding_fn=sharding_fn)
+        """Restore `step` (default: newest), falling back through older
+        checkpoints when the newer ones fail verification.  Returns
+        (step, tree) or None when nothing intact exists.  A tree-structure
+        mismatch raises immediately — older checkpoints would mismatch the
+        same way, and silently restoring the wrong structure is the one
+        failure this module exists to prevent."""
+        if step is not None:
+            return step, restore_checkpoint(self.path, step, like,
+                                            host_id=self.host_id,
+                                            sharding_fn=sharding_fn)
+        for s in reversed(_all_steps(self.path)):
+            try:
+                tree = restore_checkpoint(self.path, s, like,
+                                          host_id=self.host_id,
+                                          sharding_fn=sharding_fn)
+                return s, tree
+            except CheckpointCorruptError as e:
+                print(f"[ckpt] step {s} failed verification ({e}); "
+                      f"falling back")
+        return None

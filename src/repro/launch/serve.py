@@ -64,12 +64,15 @@ def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
                  page_size: int = 16, num_pages: int | None = None,
                  prefill_chunk: int = 32, seed: int = 0, mesh=None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, **degrade):
     """(engine, vocab) ready for submit()/run() — shared by the launcher,
     tests and benchmarks so every caller serves through the same stack.
     ``mesh`` (a concrete Mesh) shards the paged pool per
     ``parallel.sharding.paged_pool_specs``.  ``temperature``/``top_k``/
-    ``sample_seed`` select seeded sampled decode (greedy by default)."""
+    ``sample_seed`` select seeded sampled decode (greedy by default).
+    Extra keywords flow into :class:`ServeConfig` — the graceful-
+    degradation knobs (``max_admission_retries``, ``admission_backoff``,
+    ``shed_pressure``, ``shed_patience``, ``shed_min_priority``)."""
     bundle = get_bundle(arch, smoke=smoke)
     params = bundle.init_params(jax.random.PRNGKey(seed))
     extras = {}
@@ -85,7 +88,7 @@ def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
                     kv_mode=kv_mode, page_size=page_size,
                     num_pages=num_pages, prefill_chunk=prefill_chunk,
                     temperature=temperature, top_k=top_k,
-                    sample_seed=sample_seed),
+                    sample_seed=sample_seed, **degrade),
         mesh=mesh)
     return engine, bundle.cfg.vocab
 

@@ -1,16 +1,43 @@
-"""Training launcher: data pipeline -> sharded train loop -> checkpoints.
+"""Training launcher: a self-healing train loop over the full runtime.
 
-Integrates the full runtime: host-sharded synthetic data with prefetch,
-jit'd train step with the production shardings (scaled down automatically on
-this CPU container via --mesh local), async checkpointing with restart
-discovery, heartbeat/straggler bookkeeping, and elastic re-shard on restore.
+The loop is an explicit recovery state machine — every transition below is
+exercised by injected faults (``repro.runtime.chaos``) in tests and CI,
+not assumed::
+
+            +--------------------- RUN ----------------------+
+            | step -> heartbeat -> monitor.check -> guard    |
+            +--+----------------+----------------------+-----+
+               | host dead /    | guard: "rollback"    | guard: "skip"
+               | straggler      | (skip budget blown   | (nonfinite grad;
+               v                |  or loss spike)      |  params untouched
+            REMESH              v                      |  by the in-jit
+            plan_elastic_    RESTORE                   |  finite guard)
+            remesh over      newest INTACT checkpoint  |
+            survivors  --->  (CRC-verified, falls  ----+--> back to RUN
+            re-shard         back past corrupt steps),
+            data + params    rewind step counter
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --smoke \
         --steps 20 --ckpt-dir /tmp/ckpt
+    # fault drills: die at step 12, NaN burst at 5, corrupt the step-10 save
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 20 \
+        --ckpt-dir /tmp/ckpt --ckpt-every 5 --chaos kill@12 --chaos nan@5
+
+Integrates host-sharded synthetic data with prefetch (step-indexed, so a
+restart or an elastic re-shard replays the exact global batches), a jit'd
+train step with the production shardings and an all-reduced finite flag,
+async CRC-committed checkpointing with restart discovery, and a simulated
+multi-host fleet (``n_hosts``): peer heartbeats are driven synthetically
+on a per-step virtual clock so silence/straggler chaos is deterministic,
+while host 0's compute is real.  In a real pod the peers are processes and
+the mesh is rebuilt from survivors; here the device set is this
+container's and ``sharding_fn`` re-places restored state onto it — the
+elastic interfaces (plan, re-shard, step-indexed data resume) are the same.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -23,24 +50,26 @@ from repro.data import DataConfig, make_train_iterator
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.optim import AdamWConfig, adamw_init
 from repro.parallel.sharding import param_specs
-from repro.runtime import HeartbeatMonitor, compat
-from repro.training import TrainHyper, make_train_step
+from repro.runtime import (ChaosInjector, ChaosKilled, HeartbeatMonitor,
+                           StragglerPolicy, compat, plan_elastic_remesh)
+from repro.training import GradGuard, GuardPolicy, TrainHyper, make_train_step
 
 
 def run(arch: str, *, smoke: bool = True, steps: int = 20,
         seq_len: int = 128, global_batch: int = 8, mesh_kind: str = "local",
         ckpt_dir: str | None = None, ckpt_every: int = 10,
         microbatches: int = 1, lr: float = 3e-4,
-        log_every: int = 1) -> dict:
+        log_every: int = 1, chaos=None, chaos_seed: int = 0,
+        n_hosts: int = 1, hb_timeout_steps: float = 4.0,
+        straggler_factor: float = 2.0, straggler_patience: int = 3,
+        guard_policy: GuardPolicy | None = None,
+        max_recoveries: int = 8) -> dict:
+    if chaos is not None and not isinstance(chaos, ChaosInjector):
+        chaos = ChaosInjector(chaos, seed=chaos_seed)
     bundle = get_bundle(arch, smoke=smoke)
     mesh = {"local": make_local_mesh,
             "single": make_production_mesh,
             "multi": lambda: make_production_mesh(multi_pod=True)}[mesh_kind]()
-
-    hyper = TrainHyper(optimizer=AdamWConfig(lr=lr, warmup_steps=5,
-                                             total_steps=max(steps, 10)),
-                       microbatches=microbatches)
-    step_fn = make_train_step(bundle.forward, hyper)
 
     key = jax.random.PRNGKey(0)
     params = bundle.init_params(key)
@@ -49,12 +78,17 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
     pspecs = param_specs(bundle.kind, params, mesh)
     psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
                        is_leaf=lambda x: isinstance(x, P))
-    params = jax.device_put(params, psh)
-    opt = {"mu": jax.device_put(opt["mu"], psh),
-           "nu": jax.device_put(opt["nu"], psh),
-           "step": jax.device_put(opt["step"], NamedSharding(mesh, P()))}
+    tree_sh = {"params": psh,
+               "opt": {"mu": psh, "nu": psh,
+                       "step": NamedSharding(mesh, P())}}
 
-    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    def sharding_fn(tree):
+        """Elastic re-shard: place a restored host tree onto whatever mesh
+        this process currently drives."""
+        return jax.device_put(tree, tree_sh)
+
+    params = jax.device_put(params, psh)
+    opt = jax.device_put(opt, tree_sh["opt"])
 
     vocab = getattr(bundle.cfg, "vocab")
     data_cfg = DataConfig(vocab=vocab, seq_len=seq_len,
@@ -64,48 +98,190 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
     mgr = None
     if ckpt_dir:
         mgr = CheckpointManager(ckpt_dir)
-        restored = mgr.restore({"params": params, "opt": opt})
+        restored = mgr.restore({"params": params, "opt": opt},
+                               sharding_fn=sharding_fn)
         if restored is not None:
             start_step, tree = restored
             params, opt = tree["params"], tree["opt"]
             print(f"[train] restored step {start_step} from {ckpt_dir}")
 
-    it = make_train_iterator(data_cfg, start_step=start_step)
-    monitor = HeartbeatMonitor([0])
-    history = []
-    extras = {}
-    if bundle.kind == "audio":
-        extras["frames"] = np.zeros(
-            (global_batch, bundle.cfg.n_audio_ctx, bundle.cfg.d_model),
-            np.float32)
-    if bundle.kind == "vlm":
-        extras["vision"] = np.zeros(
-            (global_batch, bundle.cfg.vision_tokens, bundle.cfg.d_model),
-            np.float32)
+    # the LR schedule spans the run's GLOBAL horizon (restored start +
+    # remaining steps), so a crash-restarted run rebuilds the exact
+    # schedule the uninterrupted run used — bit-identical resume depends
+    # on it (a schedule over "steps remaining" would diverge post-warmup)
+    hyper = TrainHyper(optimizer=AdamWConfig(
+        lr=lr, warmup_steps=5, total_steps=max(start_step + steps, 10)),
+        microbatches=microbatches)
+    step_fn = make_train_step(bundle.forward, hyper)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    # -- simulated fleet: host 0 is this process; peers heartbeat on a
+    # per-step virtual clock so chaos silence/slowness is deterministic
+    host_id, rank, n_data_hosts = 0, 0, n_hosts
+    assert global_batch % n_hosts == 0, (global_batch, n_hosts)
+    vclock = [0.0]
+    monitor = HeartbeatMonitor(
+        list(range(n_hosts)),
+        StragglerPolicy(heartbeat_timeout_s=hb_timeout_steps,
+                        straggler_factor=straggler_factor,
+                        patience=straggler_patience),
+        clock=lambda: vclock[0])
+    guard = GradGuard(guard_policy or GuardPolicy())
+
+    def make_extras(per_host_batch: int) -> dict:
+        extras = {}
+        if bundle.kind == "audio":
+            extras["frames"] = np.zeros(
+                (per_host_batch, bundle.cfg.n_audio_ctx, bundle.cfg.d_model),
+                np.float32)
+        if bundle.kind == "vlm":
+            extras["vision"] = np.zeros(
+                (per_host_batch, bundle.cfg.vision_tokens,
+                 bundle.cfg.d_model), np.float32)
+        return extras
+
+    it = make_train_iterator(data_cfg, host_id=rank, n_hosts=n_data_hosts,
+                             start_step=start_step)
+    extras = make_extras(global_batch // n_data_hosts)
+
+    history, step_log, events = [], [], []
+    end_step = start_step + steps
+    i = start_step
+    recoveries = 0
+    last_saved = start_step if mgr else None
+
+    def restore_or_keep(reason: str, at_step: int) -> int:
+        """RESTORE state: rewind to the newest intact checkpoint (the
+        manager walks past corrupt ones); with nothing restorable, keep
+        the current (guarded) state and continue forward."""
+        nonlocal params, opt
+        if mgr is None:
+            events.append({"kind": "rollback_unavailable", "step": at_step,
+                           "reason": reason})
+            return at_step
+        mgr.wait()
+        restored = mgr.restore({"params": params, "opt": opt},
+                               sharding_fn=sharding_fn)
+        if restored is None:
+            events.append({"kind": "rollback_unavailable", "step": at_step,
+                           "reason": reason})
+            return at_step
+        rstep, tree = restored
+        params, opt = tree["params"], tree["opt"]
+        events.append({"kind": "restore", "step": at_step,
+                       "restored_step": rstep, "reason": reason})
+        print(f"[train] {reason} at step {at_step}: restored checkpoint "
+              f"step {rstep}")
+        return rstep
+
+    def reopen_data(at_step: int) -> None:
+        nonlocal it, extras
+        it.close()
+        it = make_train_iterator(data_cfg, host_id=rank,
+                                 n_hosts=n_data_hosts, start_step=at_step)
+        extras = make_extras(global_batch // n_data_hosts)
 
     try:
         with compat.set_mesh(mesh):
-            for i in range(start_step, start_step + steps):
+            while i < end_step:
+                vclock[0] += 1.0
+                if chaos is not None:
+                    try:
+                        chaos.maybe_kill(i)   # raises ChaosKilled (exit 43)
+                    except ChaosKilled:
+                        # preemption grace (SIGTERM-style): an in-flight
+                        # async save lands before death, so "the last
+                        # completed checkpoint" is a deterministic notion
+                        if mgr:
+                            mgr.wait()
+                        raise
+
                 t0 = time.time()
                 idx, batch = it.next()
+                assert idx == i, (idx, i)
                 batch = {**batch, **extras}
-                params, opt, metrics = jit_step(params, opt, batch)
+                gs = np.float32(chaos.grad_scale(i)) if chaos is not None \
+                    else np.float32(1.0)
+                params, opt, metrics = jit_step(params, opt, batch, gs)
                 loss = float(metrics["loss"])
+                finite = bool(float(metrics["finite"]) > 0.0)
                 dt = time.time() - t0
-                monitor.heartbeat(0, dt)
+
+                # heartbeats: ours is real; simulated peers echo our step
+                # time unless chaos silences or slows them
+                for h in monitor.alive_hosts():
+                    if chaos is not None:
+                        if chaos.heartbeat_silenced(h, i):
+                            continue
+                        monitor.heartbeat(
+                            h, dt * chaos.step_time_factor(h, i))
+                    else:
+                        monitor.heartbeat(h, dt)
+                failed = monitor.check()
+                action = guard.update(loss, finite)
+
                 history.append(loss)
+                step_log.append(i)
                 if i % log_every == 0:
+                    flag = "" if finite else "  [nonfinite->skipped]"
                     print(f"[train] step {i} loss {loss:.4f} "
-                          f"({dt*1e3:.0f} ms)")
+                          f"({dt*1e3:.0f} ms){flag}")
+
+                if failed:
+                    # FAULT -> RESTORE -> REMESH: stop, restore the newest
+                    # intact checkpoint, re-plan the mesh over survivors,
+                    # re-shard params/opt and the step-indexed data stream
+                    recoveries += 1
+                    if recoveries > max_recoveries:
+                        raise RuntimeError("recovery limit exceeded")
+                    survivors = monitor.alive_hosts()
+                    if host_id not in survivors:
+                        raise RuntimeError(f"host {host_id} was evicted")
+                    plan = plan_elastic_remesh(survivors, chips_per_host=1,
+                                               model_parallel=1)
+                    rank = plan.host_ranks[host_id]
+                    n_data_hosts = plan.n_hosts
+                    assert global_batch % n_data_hosts == 0, \
+                        (global_batch, n_data_hosts)
+                    events.append({"kind": "remesh", "step": i,
+                                   "failed": failed,
+                                   "survivors": survivors,
+                                   "plan": dataclasses.asdict(plan)})
+                    print(f"[train] hosts {failed} failed at step {i}; "
+                          f"remesh over {survivors} "
+                          f"(dp={plan.data_parallel})")
+                    i = restore_or_keep("host failure", i)
+                    reopen_data(i)
+                    guard.reset()
+                    continue
+
+                if action == "rollback":
+                    recoveries += 1
+                    if recoveries > max_recoveries:
+                        raise RuntimeError("recovery limit exceeded")
+                    i = restore_or_keep("divergence", i)
+                    reopen_data(i)
+                    guard.reset()
+                    continue
+
+                if action == "skip":
+                    events.append({"kind": "skip", "step": i})
+
                 if mgr and (i + 1) % ckpt_every == 0:
                     mgr.save_async(i + 1, {"params": params, "opt": opt})
+                    last_saved = i + 1
+                    if chaos is not None and chaos.wants_corrupt(i + 1):
+                        mgr.wait()             # land it, then damage it
+                        chaos.maybe_corrupt(ckpt_dir, i + 1)
+                i += 1
+            if mgr and last_saved != end_step:
+                mgr.save_async(end_step, {"params": params, "opt": opt})
             if mgr:
-                mgr.save_async(start_step + steps,
-                               {"params": params, "opt": opt})
                 mgr.wait()
     finally:
         it.close()
-    return {"losses": history, "params": params, "opt": opt}
+    return {"losses": history, "steps": step_log, "events": events,
+            "params": params, "opt": opt}
 
 
 def main():
@@ -122,14 +298,27 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--chaos", action="append", default=None,
+                    metavar="SPEC",
+                    help="inject a fault (repeatable): kill@N, nan@N, "
+                         "silence@N:host=H, slow@N:host=H,factor=F, "
+                         "corrupt@N:mode=flip|truncate")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--n-hosts", type=int, default=1,
+                    help="simulated fleet size (peers heartbeat "
+                         "synthetically; host 0 is this process)")
+    ap.add_argument("--hb-timeout-steps", type=float, default=4.0)
     a = ap.parse_args()
     out = run(a.arch, smoke=a.smoke, steps=a.steps, seq_len=a.seq_len,
               global_batch=a.global_batch, mesh_kind=a.mesh,
               ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
-              microbatches=a.microbatches, lr=a.lr)
+              microbatches=a.microbatches, lr=a.lr, chaos=a.chaos,
+              chaos_seed=a.chaos_seed, n_hosts=a.n_hosts,
+              hb_timeout_steps=a.hb_timeout_steps)
     losses = out["losses"]
     print(f"[train] done: first loss {losses[0]:.4f}, "
-          f"last loss {losses[-1]:.4f}")
+          f"last loss {losses[-1]:.4f}, "
+          f"{len(out['events'])} fault events")
 
 
 if __name__ == "__main__":

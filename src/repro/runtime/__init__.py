@@ -1,6 +1,8 @@
-from . import compat
+from . import chaos, compat
+from .chaos import ChaosInjector, ChaosKilled, ChaosSpec, parse_chaos
 from .fault import (ElasticPlan, HeartbeatMonitor, HostState, StragglerPolicy,
                     plan_elastic_remesh)
 
-__all__ = ["ElasticPlan", "HeartbeatMonitor", "HostState", "StragglerPolicy",
-           "compat", "plan_elastic_remesh"]
+__all__ = ["ChaosInjector", "ChaosKilled", "ChaosSpec", "ElasticPlan",
+           "HeartbeatMonitor", "HostState", "StragglerPolicy", "chaos",
+           "compat", "parse_chaos", "plan_elastic_remesh"]

@@ -1,0 +1,224 @@
+"""Deterministic, seedable fault injection for the pod runtime.
+
+The recovery paths in this repo (checkpoint fallback, elastic re-mesh,
+nonfinite-grad skip) are only trustworthy if they are EXERCISED — a
+recovery path that has never run is a second bug waiting behind the first.
+This module injects the failures the training and serving stacks will
+actually see, as a pure function of (spec, step, seed), so every chaos
+scenario replays bit-identically in tests and CI.
+
+Fault taxonomy (spec strings, parsed by :func:`parse_chaos`):
+
+  ``kill@N``                       process death entering step N — raises
+                                   :class:`ChaosKilled` (a ``SystemExit``
+                                   with exit code 43, so ``--chaos kill@N``
+                                   kills the launcher like a real preempt)
+  ``silence@N:host=H,duration=D``  host H's heartbeats go dark for D steps
+                                   starting at N (default: forever) — the
+                                   monitor must evict it and the loop must
+                                   re-mesh over the survivors
+  ``slow@N:host=H,factor=F,duration=D``
+                                   host H reports step times inflated by F
+                                   (straggler; default forever) — the
+                                   monitor's straggler logic must evict it
+  ``nan@N:duration=D``             grads are scaled by NaN for D steps
+                                   (default 1) starting at N — the train
+                                   step's finite guard must skip the update
+  ``corrupt@N:mode=flip|truncate,host=H``
+                                   the checkpoint saved at train step N is
+                                   corrupted on disk right after it lands
+                                   (one flipped byte, or the shard cut in
+                                   half) — restore must detect it by CRC
+                                   and fall back to an older intact step
+
+Usage::
+
+    with ChaosInjector(["kill@12", "nan@5"], seed=0) as chaos:
+        train.run(..., chaos=chaos)
+
+or from the CLI: ``python -m repro.launch.train --arch qwen3-4b \
+--chaos kill@12 --chaos nan@5``.  The injector records every fault it
+fires in ``.fired`` so tests can assert the scenario actually happened.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+# SystemExit code for an injected kill: distinguishable from crashes (1)
+# and clean exits (0) so restart harnesses can tell "chaos killed me" apart
+# from "I am broken".
+KILL_EXIT_CODE = 43
+
+KINDS = ("kill", "silence", "slow", "nan", "corrupt")
+
+# How long a fault stays active when the spec gives no duration: a NaN
+# burst is one step, but silence/slowness persist until eviction.
+_FOREVER = 1 << 30
+_DEFAULT_DURATION = {"kill": 1, "silence": _FOREVER, "slow": _FOREVER,
+                     "nan": 1, "corrupt": 1}
+
+
+class ChaosKilled(SystemExit):
+    """Injected process death. Subclasses SystemExit so an unhandled kill
+    exits the interpreter with :data:`KILL_EXIT_CODE`; tests catch it."""
+
+    def __init__(self, step: int):
+        super().__init__(KILL_EXIT_CODE)
+        self.step = step
+
+    def __str__(self) -> str:  # SystemExit.__str__ would print "43"
+        return f"chaos: killed at step {self.step}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSpec:
+    kind: str                    # one of KINDS
+    step: int                    # first step the fault is active
+    host: int = -1               # target host (silence/slow) or shard
+    #                              (corrupt); -1 -> host 1 / shard 0
+    duration: int = 0            # steps active; 0 -> per-kind default
+    factor: float = 4.0          # step-time inflation (slow)
+    mode: str = "flip"           # corrupt: flip | truncate
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown chaos kind {self.kind!r} "
+                             f"(expected one of {KINDS})")
+        if self.duration == 0:
+            object.__setattr__(self, "duration",
+                               _DEFAULT_DURATION[self.kind])
+        if self.host < 0:
+            # silence/slow target a PEER by default (host 0 is "us");
+            # corrupt targets our own shard 0
+            object.__setattr__(self, "host",
+                               0 if self.kind == "corrupt" else 1)
+
+    def active(self, step: int) -> bool:
+        return self.step <= step < self.step + self.duration
+
+
+def parse_chaos(text: str) -> ChaosSpec:
+    """``kind@step[:k=v,...]`` -> ChaosSpec (see module docstring)."""
+    kind, sep, rest = text.partition("@")
+    if not sep or not rest:
+        raise ValueError(f"chaos spec {text!r}: expected 'kind@step[:opts]'")
+    step_s, _, opts = rest.partition(":")
+    kw: dict = {"kind": kind.strip(), "step": int(step_s)}
+    for pair in filter(None, opts.split(",")):
+        k, sep, v = pair.partition("=")
+        if not sep:
+            raise ValueError(f"chaos spec {text!r}: bad option {pair!r}")
+        k = k.strip()
+        if k in ("host", "duration"):
+            kw[k] = int(v)
+        elif k == "factor":
+            kw[k] = float(v)
+        elif k == "mode":
+            kw[k] = v.strip()
+        else:
+            raise ValueError(f"chaos spec {text!r}: unknown option {k!r}")
+    return ChaosSpec(**kw)
+
+
+def corrupt_checkpoint(ckpt_dir: str, step: int, *, host_id: int = 0,
+                       mode: str = "flip", seed: int = 0) -> str:
+    """Damage the shard ``host_id`` of checkpoint ``step`` on disk.
+
+    ``flip`` XORs one byte in the middle third of the file (the CRC in the
+    commit marker no longer matches); ``truncate`` cuts the file in half
+    (np.load would die even without the CRC).  Returns the damaged path.
+    """
+    shard = os.path.join(ckpt_dir, f"step_{step:08d}",
+                         f"shard_{host_id}.npz")
+    size = os.path.getsize(shard)
+    if mode == "truncate":
+        with open(shard, "r+b") as f:
+            f.truncate(size // 2)
+    elif mode == "flip":
+        rng = np.random.default_rng(seed)
+        off = int(rng.integers(size // 3, 2 * size // 3))
+        with open(shard, "r+b") as f:
+            f.seek(off)
+            byte = f.read(1)
+            f.seek(off)
+            f.write(bytes([byte[0] ^ 0xFF]))
+    else:
+        raise ValueError(f"unknown corrupt mode {mode!r}")
+    return shard
+
+
+class ChaosInjector:
+    """Consulted by the train loop at its fault points; pure host state.
+
+    Every query is a deterministic function of (specs, step, seed); the
+    injector never holds clocks or randomness that would make a scenario
+    unrepeatable.  ``fired`` logs each event once, in firing order.
+    """
+
+    def __init__(self, specs=(), *, seed: int = 0):
+        self.specs = [parse_chaos(s) if isinstance(s, str) else s
+                      for s in specs]
+        self.seed = seed
+        self.fired: list[str] = []
+
+    # -- context manager (tests) -------------------------------------------
+
+    def __enter__(self) -> "ChaosInjector":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+    # -- internals ----------------------------------------------------------
+
+    def _log(self, event: str) -> None:
+        if event not in self.fired:
+            self.fired.append(event)
+
+    def _active(self, kind: str, step: int):
+        return (sp for sp in self.specs
+                if sp.kind == kind and sp.active(step))
+
+    # -- fault points (one per taxonomy row) --------------------------------
+
+    def maybe_kill(self, step: int) -> None:
+        for sp in self._active("kill", step):
+            self._log(f"kill@{step}")
+            raise ChaosKilled(step)
+
+    def heartbeat_silenced(self, host: int, step: int) -> bool:
+        for sp in self._active("silence", step):
+            if sp.host == host:
+                self._log(f"silence@{sp.step}:host={host}")
+                return True
+        return False
+
+    def step_time_factor(self, host: int, step: int) -> float:
+        f = 1.0
+        for sp in self._active("slow", step):
+            if sp.host == host:
+                self._log(f"slow@{sp.step}:host={host}")
+                f *= sp.factor
+        return f
+
+    def grad_scale(self, step: int) -> float:
+        for sp in self._active("nan", step):
+            self._log(f"nan@{step}")
+            return float("nan")
+        return 1.0
+
+    def wants_corrupt(self, saved_step: int) -> bool:
+        return any(sp.step == saved_step for sp in self.specs
+                   if sp.kind == "corrupt")
+
+    def maybe_corrupt(self, ckpt_dir: str, saved_step: int) -> None:
+        """Called by the train loop right after checkpoint ``saved_step``
+        is fully on disk (the loop waits for the async save first)."""
+        for sp in self.specs:
+            if sp.kind == "corrupt" and sp.step == saved_step:
+                corrupt_checkpoint(ckpt_dir, saved_step, host_id=sp.host,
+                                   mode=sp.mode, seed=self.seed)
+                self._log(f"corrupt@{saved_step}:mode={sp.mode}")

@@ -62,9 +62,14 @@ class HeartbeatMonitor:
             if len(st.step_times) > 32:
                 st.step_times.pop(0)
 
-    def _median_step(self) -> float | None:
+    def _median_step(self, exclude: int | None = None) -> float | None:
+        """Fleet median of the latest step times, optionally EXCLUDING one
+        host: a host must be judged against its peers, not against a
+        median its own sample drags — with n=2 the self-inclusive median
+        of (fast, slow) sits at the slow sample and the straggler judges
+        itself normal forever."""
         times = [st.step_times[-1] for st in self.hosts.values()
-                 if st.alive and st.step_times]
+                 if st.alive and st.step_times and st.host_id != exclude]
         if not times:
             return None
         times.sort()
@@ -73,7 +78,6 @@ class HeartbeatMonitor:
     def check(self) -> list[int]:
         """Returns newly-failed/evicted host ids."""
         now = self._clock()
-        med = self._median_step()
         failed = []
         for st in self.hosts.values():
             if not st.alive:
@@ -82,6 +86,7 @@ class HeartbeatMonitor:
                 st.alive = False
                 failed.append(st.host_id)
                 continue
+            med = self._median_step(exclude=st.host_id)
             if med and st.step_times and \
                     st.step_times[-1] > self.policy.straggler_factor * med:
                 st.slow_strikes += 1

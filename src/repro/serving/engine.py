@@ -61,6 +61,12 @@ class ServeConfig:
     prefill_chunk: int = 32         # paged: tokens per prefill call
     prefill_token_budget: int = 64  # paged: prefill tokens per tick
     min_prefill_bucket: int = 8     # dense: smallest padded prompt bucket
+    # graceful degradation (all off by default = seed behaviour):
+    max_admission_retries: int = 0  # shed a request after N failed admits
+    admission_backoff: int = 0      # base hold-off ticks between admits
+    shed_pressure: float = 1.0      # pool-used fraction counted as critical
+    shed_patience: int = 0          # critical ticks before load-shed (0=off)
+    shed_min_priority: int = 1      # load-shed drops waiting prio < this
 
 
 @dataclasses.dataclass
@@ -68,6 +74,7 @@ class _Slot:
     request_id: int | None = None
     generated: list[int] = dataclasses.field(default_factory=list)
     remaining: int = 0
+    deadline_tick: int | None = None
 
 
 def _pow2_at_least(n: int, lo: int = 1) -> int:
@@ -92,7 +99,10 @@ class ServingEngine:
         self.cfg = cfg
         self.mesh = mesh               # concrete Mesh: shard the page pool
         self.results: dict[int, list[int]] = {}
+        self.outcomes: dict[int, str] = {}   # rid -> ok | timeout | shed
         self._next_id = 0
+        self._pressure_ticks = 0             # consecutive critical ticks
+        self._shed_mode_ticks = 0
         self._rng = np.random.default_rng(cfg.sample_seed)
         if cfg.kv_mode == "dense":
             self._init_dense()
@@ -132,9 +142,13 @@ class ServingEngine:
     # intake
     # ------------------------------------------------------------------
 
-    def submit(self, prompt_tokens: np.ndarray, priority: int = 0) -> int:
+    def submit(self, prompt_tokens: np.ndarray, priority: int = 0,
+               deadline: int | None = None) -> int:
         """Queue a request.  ``priority`` (larger = more urgent) drives
-        paged admission/preemption; the dense path keeps seed FIFO."""
+        paged admission/preemption; the dense path keeps seed FIFO.
+        ``deadline`` is a tick budget counted from NOW: a request still
+        unfinished after that many engine ticks is evicted with whatever
+        it has generated (``outcomes[rid] == "timeout"``)."""
         rid = self._next_id
         self._next_id += 1
         prompt = np.asarray(prompt_tokens, np.int32)
@@ -145,14 +159,17 @@ class ServingEngine:
             raise ValueError(f"request {rid}: prompt+max_new {total} "
                              f"exceeds max_len {self.cfg.max_len}")
         if self.cfg.kv_mode == "dense":
-            self.queue.append((rid, prompt, priority))
+            dl = None if deadline is None else self._dense_tick + deadline
+            self.queue.append((rid, prompt, priority, dl))
             return rid
+        req = Request(rid=rid, prompt=prompt, priority=priority,
+                      arrival=rid, max_new_tokens=self.cfg.max_new_tokens,
+                      deadline_tick=None if deadline is None
+                      else self.ticks + deadline)
         need = self.kv.pages_for(total) + 1     # +1 decode headroom
         if need > self.kv.cfg.total_pages - 1:
             raise ValueError(f"request {rid}: needs {need} pages, pool has "
                              f"{self.kv.cfg.total_pages - 1}")
-        req = Request(rid=rid, prompt=prompt, priority=priority,
-                      arrival=rid, max_new_tokens=self.cfg.max_new_tokens)
         self._requests[rid] = req
         self.sched.submit(req)
         return rid
@@ -170,7 +187,8 @@ class ServingEngine:
     def _init_dense(self) -> None:
         cfg = self.cfg
         self.slots = [_Slot() for _ in range(cfg.batch)]
-        self.queue: list[tuple[int, np.ndarray, int]] = []
+        self.queue: list[tuple[int, np.ndarray, int, int | None]] = []
+        self._dense_tick = 0
         self._decode = jax.jit(self.bundle.decode_step)
         self._cache_axes: dict | None = None
         self._prefill_template = None       # built lazily, reused forever
@@ -201,7 +219,7 @@ class ServingEngine:
         for slot_idx in self._free_slots():
             if not self.queue:
                 break
-            rid, prompt, _ = self.queue.pop(0)
+            rid, prompt, _, deadline = self.queue.pop(0)
             if self._prefill_template is None:
                 self._prefill_template = self.bundle.init_cache(
                     1, self.cfg.max_len)
@@ -222,6 +240,7 @@ class ServingEngine:
             s.request_id = rid
             s.generated = [nxt]
             s.remaining = self.cfg.max_new_tokens - 1
+            s.deadline_tick = deadline
         return cache
 
     def _write_slot(self, cache, one, idx):
@@ -247,12 +266,36 @@ class ServingEngine:
                 v, one[k].astype(v.dtype), start)
         return out
 
+    def _expire_dense(self) -> None:
+        """Timeout eviction, dense flavour: queued requests past deadline
+        never start; decoding slots past deadline free up with whatever
+        they generated."""
+        now = self._dense_tick
+        kept = []
+        for rid, prompt, prio, dl in self.queue:
+            if dl is not None and now >= dl:
+                self.results[rid] = []
+                self.outcomes[rid] = "timeout"
+            else:
+                kept.append((rid, prompt, prio, dl))
+        self.queue = kept
+        for i, s in enumerate(self.slots):
+            if s.request_id is not None and s.deadline_tick is not None \
+                    and now >= s.deadline_tick:
+                self.results[s.request_id] = s.generated
+                self.outcomes[s.request_id] = "timeout"
+                self.slots[i] = _Slot()
+
     def _run_dense(self, cache=None) -> dict[int, list[int]]:
         cfg = self.cfg
         if cache is None:
             cache = self.bundle.init_cache(cfg.batch, cfg.max_len)
         while self.queue or any(s.request_id is not None for s in self.slots):
+            self._dense_tick += 1
+            self._expire_dense()
             cache = self._admit(cache)
+            if not any(s.request_id is not None for s in self.slots):
+                continue
             # one decode tick for the whole pool
             last = np.zeros((cfg.batch, 1), np.int32)
             for i, s in enumerate(self.slots):
@@ -272,6 +315,7 @@ class ServingEngine:
                 s.remaining -= 1
                 if s.remaining <= 0 or tok == cfg.eos_id:
                     self.results[s.request_id] = s.generated
+                    self.outcomes[s.request_id] = "ok"
                     self.slots[i] = _Slot()
         return self.results
 
@@ -306,7 +350,9 @@ class ServingEngine:
             head_dim=mcfg.dh, kv_bytes=kv_bytes, quantize=quant))
         self.sched = PhaseScheduler(SchedulerConfig(
             num_slots=cfg.batch, prefill_chunk=cfg.prefill_chunk,
-            prefill_token_budget=cfg.prefill_token_budget))
+            prefill_token_budget=cfg.prefill_token_budget,
+            max_admission_retries=cfg.max_admission_retries,
+            admission_backoff=cfg.admission_backoff))
         self.pool = self.bundle.init_paged_pool(num_pages, cfg.page_size,
                                                 kv_dtype=kv_dtype)
         if self.mesh is not None:
@@ -352,7 +398,28 @@ class ServingEngine:
 
     def _finish(self, req: Request) -> None:
         self.results[req.rid] = req.output
+        self.outcomes[req.rid] = "ok"
         self.sched.finish(self.kv, req)
+
+    def _degrade_tick(self) -> None:
+        """Per-tick degradation bookkeeping for the paged path: deadline
+        eviction, shed collection, and load-shed mode when page-pool
+        pressure stays critical for ``shed_patience`` consecutive ticks."""
+        cfg = self.cfg
+        for req in self.sched.expire_deadlines(self.kv, self.ticks):
+            self.results[req.rid] = req.output
+            self.outcomes[req.rid] = "timeout"
+        if cfg.shed_patience > 0:
+            st = self.kv.stats()
+            frac = st["pages_used"] / max(1, st["pages_total"] - 1)
+            if frac >= cfg.shed_pressure:
+                self._pressure_ticks += 1
+            else:
+                self._pressure_ticks = 0
+            if self._pressure_ticks >= cfg.shed_patience:
+                self._shed_mode_ticks += 1
+                self.sched.shed_waiting(
+                    below_priority=cfg.shed_min_priority)
 
     def _run_paged(self) -> dict[int, list[int]]:
         cfg = self.cfg
@@ -362,7 +429,11 @@ class ServingEngine:
             self.ticks += 1
             if self.ticks > max_ticks:     # safety valve: scheduler bug
                 raise RuntimeError("paged scheduler made no progress")
-            self.sched.admit(self.kv)
+            self._degrade_tick()
+            self.sched.admit(self.kv, now=self.ticks)
+            for req in self.sched.drain_shed():
+                self.results[req.rid] = req.output
+                self.outcomes[req.rid] = "shed"
 
             # --- prefill phase: budgeted chunks -----------------------
             for job in self.sched.prefill_jobs():
@@ -409,6 +480,14 @@ class ServingEngine:
                         tok == cfg.eos_id:
                     self._finish(req)
         return self.results
+
+    def degradation_stats(self) -> dict:
+        """Outcome counters + load-shed bookkeeping (all modes)."""
+        counts = {"ok": 0, "timeout": 0, "shed": 0}
+        for v in self.outcomes.values():
+            counts[v] = counts.get(v, 0) + 1
+        counts["shed_mode_ticks"] = self._shed_mode_ticks
+        return counts
 
     def kv_stats(self) -> dict:
         """Resident-KV accounting (benchmarks): paged modes report pool

@@ -24,6 +24,21 @@ request with priority >= the one that needs the pages; when no strictly
 lower-priority victim exists, a decoding slot that cannot grow evicts
 ITSELF (equal-priority peers keep their progress).
 
+Graceful degradation (all off by default — the seed behaviour is the
+zero-config path):
+
+  * deadlines — a request may carry ``deadline_tick``;
+    :meth:`PhaseScheduler.expire_deadlines` evicts it (waiting OR active)
+    once the engine's tick clock passes it, returning pages to the pool so
+    one stuck request cannot hold capacity forever;
+  * bounded admission retry with backoff — when ``admission_backoff`` is
+    set, a request that fails admission stops blocking the queue head
+    (lower-priority work behind it may fit) and retries after an
+    exponentially growing hold-off; after ``max_admission_retries``
+    failures it is SHED (``drain_shed``) instead of waiting forever;
+  * load shedding — :meth:`shed_waiting` drops queued sub-priority work
+    wholesale; the engine invokes it when pool pressure stays critical.
+
 The scheduler is host-side control logic over :class:`~repro.serving.kv.
 BlockPoolKV` — no jax imports — so policies are unit-testable in
 microseconds.  The engine executes the plans it returns.
@@ -62,6 +77,9 @@ class Request:
     #   recompute; still part of the request's output)
     max_new_tokens: int = 0
     preemptions: int = 0
+    deadline_tick: int | None = None   # evict once engine tick passes this
+    admit_attempts: int = 0            # failed admission tries so far
+    next_admit_tick: int = 0           # backoff: don't retry before this
 
     @property
     def n_generated(self) -> int:
@@ -82,6 +100,8 @@ class SchedulerConfig:
     prefill_chunk: int = 32            # tokens per prefill call
     prefill_token_budget: int = 64     # prefill tokens per tick, all reqs
     decode_headroom_pages: int = 1     # reserved beyond the prompt at admit
+    max_admission_retries: int = 0     # 0 = retry forever (seed behaviour)
+    admission_backoff: int = 0         # base hold-off ticks; 0 = no backoff
 
 
 @dataclasses.dataclass
@@ -99,6 +119,7 @@ class PhaseScheduler:
         self._waiting: list[tuple[int, int, Request]] = []   # priority heap
         self._active: dict[int, Request] = {}                # slot -> req
         self._tie = itertools.count()
+        self._shed: list[Request] = []     # retry budget blown / load shed
 
     # -- intake -------------------------------------------------------------
 
@@ -141,13 +162,29 @@ class PhaseScheduler:
         req.preemptions += 1
         self.submit(req)
 
-    def admit(self, kv: BlockPoolKV) -> list[Request]:
+    def admit(self, kv: BlockPoolKV, *, now: int = 0) -> list[Request]:
         """Admit waiting requests in priority order; may evict lower-
         priority active requests when the pool is the binding constraint.
-        Returns the newly admitted requests (now in PREFILL phase)."""
-        admitted = []
+        Returns the newly admitted requests (now in PREFILL phase).
+
+        With ``admission_backoff``/``max_admission_retries`` configured, a
+        request that fails admission no longer blocks the queue head: it is
+        held off for ``admission_backoff * 2**(attempts-1)`` ticks (so the
+        next-priority request gets a try) and shed outright once its retry
+        budget is exhausted.  With both at 0 the seed head-of-line
+        behaviour is preserved exactly."""
+        retrying = (self.cfg.admission_backoff > 0
+                    or self.cfg.max_admission_retries > 0)
+        admitted: list[Request] = []
+        deferred: list[tuple[int, int, Request]] = []
         while self._waiting:
-            _, _, req = self._waiting[0]
+            item = heapq.heappop(self._waiting)
+            _, _, req = item
+            if req.phase is not Phase.WAITING:   # expired while queued
+                continue
+            if req.next_admit_tick > now:        # backing off
+                deferred.append(item)
+                continue
             need = kv.pages_for(len(req.prompt)) + \
                 self.cfg.decode_headroom_pages
             # page pressure: evict strictly-lower-priority work first
@@ -159,8 +196,19 @@ class PhaseScheduler:
                 self._evict(kv, victim)
             if not kv.can_alloc(need) or \
                     len(self._active) >= self.cfg.num_slots:
-                break
-            heapq.heappop(self._waiting)
+                if not retrying:
+                    deferred.append(item)
+                    break                        # seed: head blocks
+                req.admit_attempts += 1
+                if 0 < self.cfg.max_admission_retries < req.admit_attempts:
+                    req.phase = Phase.FINISHED   # retry budget blown: shed
+                    self._shed.append(req)
+                else:
+                    req.next_admit_tick = now + max(
+                        1, self.cfg.admission_backoff) * \
+                        2 ** (req.admit_attempts - 1)
+                    deferred.append(item)
+                continue
             slot = next(i for i in range(self.cfg.num_slots)
                         if i not in self._active)
             kv.ensure(slot, len(req.prompt) +
@@ -168,9 +216,59 @@ class PhaseScheduler:
             req.slot = slot
             req.phase = Phase.PREFILL
             req.prefill_pos = 0
+            req.admit_attempts = 0
             self._active[slot] = req
             admitted.append(req)
+        for item in deferred:
+            heapq.heappush(self._waiting, item)
         return admitted
+
+    # -- degradation: deadlines, shedding -----------------------------------
+
+    def expire_deadlines(self, kv: BlockPoolKV, now: int) -> list[Request]:
+        """Evict every request whose deadline has passed — active slots
+        release their pages immediately (a stuck request must not hold
+        capacity), waiting entries are dropped from the queue.  Returns the
+        expired requests; the engine records their partial output."""
+        expired: list[Request] = []
+        for req in list(self._active.values()):
+            if req.deadline_tick is not None and now >= req.deadline_tick:
+                kv.free_slot(req.slot, evicted=True)
+                del self._active[req.slot]
+                req.slot = -1
+                req.phase = Phase.FINISHED
+                expired.append(req)
+        for _, _, req in self._waiting:
+            if req.phase is Phase.WAITING and req.deadline_tick is not None \
+                    and now >= req.deadline_tick:
+                req.phase = Phase.FINISHED
+                expired.append(req)
+        if expired:
+            self._waiting = [it for it in self._waiting
+                             if it[2].phase is Phase.WAITING]
+            heapq.heapify(self._waiting)
+        return expired
+
+    def shed_waiting(self, *, below_priority: int) -> list[Request]:
+        """Load-shed mode: drop every WAITING request with priority below
+        the floor (admitted work keeps running — shedding protects the
+        requests already holding pages)."""
+        dropped = [req for _, _, req in self._waiting
+                   if req.phase is Phase.WAITING
+                   and req.priority < below_priority]
+        for req in dropped:
+            req.phase = Phase.FINISHED
+        if dropped:
+            self._waiting = [it for it in self._waiting
+                             if it[2].phase is Phase.WAITING]
+            heapq.heapify(self._waiting)
+        self._shed.extend(dropped)
+        return dropped
+
+    def drain_shed(self) -> list[Request]:
+        """Requests shed since the last drain (retry budget or load shed)."""
+        out, self._shed = self._shed, []
+        return out
 
     # -- prefill phase ------------------------------------------------------
 

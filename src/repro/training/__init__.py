@@ -1,3 +1,5 @@
-from .step import TrainHyper, make_train_step, loss_fn
+from .step import (GradGuard, GuardPolicy, TrainHyper, loss_fn,
+                   make_train_step)
 
-__all__ = ["TrainHyper", "make_train_step", "loss_fn"]
+__all__ = ["GradGuard", "GuardPolicy", "TrainHyper", "loss_fn",
+           "make_train_step"]

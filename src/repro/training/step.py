@@ -7,11 +7,21 @@ lax.scan over grad accumulation so the global batch is decoupled from
 per-device activation memory; remat uses the dots-saveable policy (recompute
 everything except matmul outputs — the standard memory/compute trade at
 scale).
+
+Nonfinite guard: every step all-reduces a FINITE flag over the loss and
+every grad leaf (under jit/GSPMD the ``jnp.all`` reductions over sharded
+leaves are already global collectives, so each host sees the same verdict)
+and, when any value is nonfinite, keeps params/opt-state byte-identical —
+a NaN burst skips a step instead of training the model into garbage.  The
+host-side :class:`GradGuard` consumes the flag plus the loss each step and
+escalates: a bounded budget of consecutive skips, then rollback; a
+sustained loss spike above the running EMA, then rollback.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Callable
 
 import jax
@@ -88,11 +98,90 @@ def make_train_step(forward: Callable, hyper: TrainHyper) -> Callable:
         return loss * inv, ce * inv, aux * inv, jax.tree.map(
             lambda g: g * inv, grads)
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, grad_scale=None):
         loss, ce, aux, grads = compute_grads(params, batch)
-        params, opt_state, om = adamw_update(hyper.optimizer, params, grads,
-                                             opt_state)
-        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        if grad_scale is not None:
+            # fault-injection hook: the chaos runtime feeds NaN here so the
+            # guard below is exercised end-to-end (1.0 in normal operation)
+            grads = jax.tree.map(lambda g: g * grad_scale, grads)
+        finite = jnp.isfinite(loss)
+        for g in jax.tree.leaves(grads):
+            finite &= jnp.all(jnp.isfinite(g))
+        new_params, new_opt, om = adamw_update(hyper.optimizer, params,
+                                               grads, opt_state)
+        # skip-step: a nonfinite loss/grad leaves params, moments AND the
+        # schedule step untouched (jnp.where keeps dtypes leaf-by-leaf)
+        keep = lambda new, old: jnp.where(finite, new, old)  # noqa: E731
+        params = jax.tree.map(keep, new_params, params)
+        opt_state = jax.tree.map(keep, new_opt, opt_state)
+        metrics = {"loss": loss, "ce": ce, "aux": aux,
+                   "finite": finite.astype(jnp.float32), **om}
         return params, opt_state, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# host-side escalation: skip budget + loss-spike divergence -> rollback
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    max_consecutive_skips: int = 3   # nonfinite steps in a row before rollback
+    spike_factor: float = 3.0        # loss > factor * EMA counts as a spike
+    spike_patience: int = 3          # consecutive spikes before rollback
+    ema_beta: float = 0.9            # loss EMA decay
+    warmup_steps: int = 5            # steps before spike detection arms
+
+
+class GradGuard:
+    """Consumes (loss, finite) once per step; returns the loop's action:
+
+    ``"ok"``        update applied, loss healthy
+    ``"skip"``      nonfinite step — params were not updated (in-jit
+                    guard); within the consecutive-skip budget
+    ``"rollback"``  skip budget exhausted, or the loss has spiked above
+                    ``spike_factor`` x its EMA for ``spike_patience``
+                    consecutive steps — restore the last checkpoint
+
+    Pure host-side state so policies are unit-testable without a model;
+    call :meth:`reset` after acting on a rollback.
+    """
+
+    def __init__(self, policy: GuardPolicy = GuardPolicy()):
+        self.policy = policy
+        self.ema: float | None = None
+        self.steps = 0
+        self.consecutive_skips = 0
+        self.consecutive_spikes = 0
+
+    def update(self, loss: float, finite: bool) -> str:
+        p = self.policy
+        if not finite or not math.isfinite(loss):
+            self.consecutive_skips += 1
+            if self.consecutive_skips > p.max_consecutive_skips:
+                return "rollback"
+            return "skip"
+        self.consecutive_skips = 0
+        self.steps += 1
+        if self.ema is None:
+            self.ema = loss
+            return "ok"
+        if self.steps > p.warmup_steps and loss > p.spike_factor * self.ema:
+            # diverging: don't fold the spike into the EMA (that would
+            # normalize the divergence it is trying to detect)
+            self.consecutive_spikes += 1
+            if self.consecutive_spikes >= p.spike_patience:
+                return "rollback"
+            return "ok"
+        self.consecutive_spikes = 0
+        self.ema = p.ema_beta * self.ema + (1 - p.ema_beta) * loss
+        return "ok"
+
+    def reset(self) -> None:
+        """Forget history after a rollback (the restored state's loss scale
+        may differ from the diverged one's)."""
+        self.ema = None
+        self.steps = 0
+        self.consecutive_skips = 0
+        self.consecutive_spikes = 0

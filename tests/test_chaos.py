@@ -1,0 +1,263 @@
+"""Fault-tolerant pod runtime: chaos injection, verified checkpoints,
+self-healing train loop.
+
+Covers the acceptance scenarios of the fault-tolerance PR, all
+deterministic:
+
+  * kill@N -> restart -> BIT-IDENTICAL loss trajectory vs an
+    uninterrupted run;
+  * corrupt@N -> CRC verification rejects the newest checkpoint and the
+    restore falls back to the newest intact older step;
+  * nan@N -> the in-jit finite guard skips the update (params untouched)
+    and the run stays finite;
+  * silence@N:host=H -> heartbeat eviction -> elastic re-mesh -> the loop
+    completes over the survivors;
+  * checkpoint v2 invariants: multi-host saves don't clobber, treedef
+    mismatch raises with the first diverging leaf path, straggler
+    detection excludes self from the median (the n=2 case).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointCorruptError, CheckpointManager,
+                              TreeStructureError, latest_step,
+                              restore_checkpoint, save_checkpoint,
+                              verified_steps, verify_checkpoint)
+from repro.runtime import HeartbeatMonitor, StragglerPolicy
+from repro.runtime.chaos import (KILL_EXIT_CODE, ChaosInjector, ChaosKilled,
+                                 corrupt_checkpoint, parse_chaos)
+
+ARCH = "qwen3-4b"
+TRAIN_KW = dict(smoke=True, seq_len=32, global_batch=4, log_every=1000)
+
+
+# ---------------------------------------------------------------------------
+# chaos specs + injector
+# ---------------------------------------------------------------------------
+
+def test_parse_chaos_specs():
+    sp = parse_chaos("kill@12")
+    assert (sp.kind, sp.step, sp.duration) == ("kill", 12, 1)
+    sp = parse_chaos("silence@3:host=2,duration=5")
+    assert (sp.kind, sp.step, sp.host, sp.duration) == ("silence", 3, 2, 5)
+    sp = parse_chaos("slow@4:factor=8.0")
+    assert sp.factor == 8.0 and sp.host == 1       # peer by default
+    sp = parse_chaos("corrupt@8:mode=truncate")
+    assert sp.mode == "truncate" and sp.host == 0  # own shard by default
+    assert parse_chaos("nan@5").duration == 1
+    for bad in ("kill", "kill@", "boom@3", "kill@3:wat=1", "kill@3:host"):
+        with pytest.raises(ValueError):
+            parse_chaos(bad)
+
+
+def test_injector_fault_points_deterministic():
+    chaos = ChaosInjector(["nan@3:duration=2", "silence@5:host=1",
+                           "slow@2:host=2,factor=4.0,duration=3"])
+    assert chaos.grad_scale(2) == 1.0
+    assert np.isnan(chaos.grad_scale(3)) and np.isnan(chaos.grad_scale(4))
+    assert chaos.grad_scale(5) == 1.0
+    assert not chaos.heartbeat_silenced(1, 4)
+    assert chaos.heartbeat_silenced(1, 5)
+    assert chaos.heartbeat_silenced(1, 10 ** 6)    # silence defaults forever
+    assert not chaos.heartbeat_silenced(2, 5)      # wrong host
+    assert chaos.step_time_factor(2, 2) == 4.0
+    assert chaos.step_time_factor(2, 5) == 1.0     # duration elapsed
+    assert chaos.step_time_factor(1, 2) == 1.0
+    assert "nan@3" in chaos.fired
+
+
+def test_injector_kill_is_system_exit_43():
+    chaos = ChaosInjector(["kill@7"])
+    chaos.maybe_kill(6)                            # not yet
+    with pytest.raises(ChaosKilled) as ei:
+        chaos.maybe_kill(7)
+    assert isinstance(ei.value, SystemExit)
+    assert ei.value.code == KILL_EXIT_CODE and ei.value.step == 7
+
+
+# ---------------------------------------------------------------------------
+# checkpoint format v2: shared dir, commit markers, CRC verify, fallback
+# ---------------------------------------------------------------------------
+
+def _tree(seed, n=3):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, n)).astype(np.float32),
+            "b": rng.normal(size=(n,)).astype(np.float32)}
+
+
+def test_multi_host_shards_share_one_step_dir(tmp_path):
+    """Two hosts saving the same step must not clobber each other (the
+    seed's per-host dir rename deleted the other host's shard); host 0's
+    manifest is the commit point."""
+    path = str(tmp_path)
+    t0, t1 = _tree(0), _tree(1)
+    save_checkpoint(path, 5, t1, host_id=1, n_hosts=2)
+    assert latest_step(path) is None               # no manifest yet
+    save_checkpoint(path, 5, t0, host_id=0, n_hosts=2)
+    assert latest_step(path) == 5
+    step_dir = os.path.join(path, "step_00000005")
+    assert sorted(f for f in os.listdir(step_dir)) == [
+        "commit_0.json", "commit_1.json", "manifest.json",
+        "shard_0.npz", "shard_1.npz"]
+    ok, why = verify_checkpoint(path, 5)
+    assert ok, why
+    r0 = restore_checkpoint(path, 5, t0, host_id=0)
+    r1 = restore_checkpoint(path, 5, t0, host_id=1)
+    np.testing.assert_array_equal(r0["w"], t0["w"])
+    np.testing.assert_array_equal(r1["w"], t1["w"])
+
+
+def test_verify_detects_missing_pieces(tmp_path):
+    path = str(tmp_path)
+    save_checkpoint(path, 1, _tree(0), n_hosts=2)  # shard 1 never arrives
+    ok, why = verify_checkpoint(path, 1)
+    assert not ok and "shard 1" in why
+    save_checkpoint(path, 1, _tree(1), host_id=1, n_hosts=2)
+    assert verify_checkpoint(path, 1)[0]
+    os.remove(os.path.join(path, "step_00000001", "commit_1.json"))
+    ok, why = verify_checkpoint(path, 1)
+    assert not ok and "never committed" in why
+
+
+@pytest.mark.parametrize("mode", ["flip", "truncate"])
+def test_corrupt_newest_falls_back_to_intact(tmp_path, mode):
+    """A damaged newest checkpoint costs one interval, not the run: the
+    manager's restore walks back to the newest step that passes CRC."""
+    path = str(tmp_path)
+    t1, t2 = _tree(1), _tree(2)
+    save_checkpoint(path, 10, t1)
+    save_checkpoint(path, 20, t2)
+    corrupt_checkpoint(path, 20, mode=mode)
+    assert verified_steps(path) == [10]
+    mgr = CheckpointManager(path)
+    step, tree = mgr.restore(t1)
+    assert step == 10
+    np.testing.assert_array_equal(tree["w"], t1["w"])
+    # explicit-step restore must NOT silently fall back
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(t1, step=20)
+
+
+def test_treedef_mismatch_names_first_diverging_path(tmp_path):
+    path = str(tmp_path)
+    save_checkpoint(path, 3, {"layers": {"attn": np.zeros(2),
+                                         "mlp": np.zeros(3)}})
+    mgr = CheckpointManager(path)
+    with pytest.raises(TreeStructureError) as ei:
+        mgr.restore({"layers": {"attn": np.zeros(2),
+                                "moe": np.zeros(3)}})
+    msg = str(ei.value)
+    assert "mlp" in msg and "moe" in msg           # names both sides
+    # shape divergence with identical structure is also a caller bug
+    with pytest.raises(TreeStructureError) as ei:
+        mgr.restore({"layers": {"attn": np.zeros(2), "mlp": np.zeros(7)}})
+    assert "mlp" in str(ei.value)
+
+
+def test_manifest_shape_dtype_audit(tmp_path):
+    """A shard whose arrays disagree with the manifest (e.g. stale file
+    from a different run) is corrupt, not silently restored."""
+    path = str(tmp_path)
+    t = _tree(0)
+    save_checkpoint(path, 4, t)
+    man = os.path.join(path, "step_00000004", "manifest.json")
+    with open(man) as f:
+        m = json.load(f)
+    m["dtypes"][0] = "float64"
+    with open(man, "w") as f:
+        json.dump(m, f)
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(path, 4, t, verify=False)
+
+
+# ---------------------------------------------------------------------------
+# straggler detection: median must exclude self (the n=2 case)
+# ---------------------------------------------------------------------------
+
+def test_straggler_median_excludes_self_two_hosts():
+    """With two hosts the SELF-INCLUSIVE median of (fast, slow) sits at
+    the slow sample, so the straggler would judge itself normal forever.
+    Judging each host against its peers evicts it within `patience`."""
+    clock = [0.0]
+    mon = HeartbeatMonitor([0, 1],
+                           StragglerPolicy(heartbeat_timeout_s=100.0,
+                                           straggler_factor=2.0, patience=3),
+                           clock=lambda: clock[0])
+    failed = []
+    for _ in range(4):
+        clock[0] += 1.0
+        mon.heartbeat(0, 1.0)
+        mon.heartbeat(1, 10.0)                     # 10x its peer
+        failed += mon.check()
+    assert failed == [1]
+    assert mon.alive_hosts() == [0]
+    # the fast host was never struck: its peer median was the slow sample
+    assert mon.hosts[0].slow_strikes == 0
+
+
+# ---------------------------------------------------------------------------
+# train-loop scenarios (real model, small smoke config)
+# ---------------------------------------------------------------------------
+
+def test_kill_restart_bit_identical_resume(tmp_path):
+    """An uninterrupted 12-step run and a chaos-killed-at-6 + restarted
+    run produce IDENTICAL loss trajectories from the restore point on —
+    step-indexed data, exact checkpoint restore, and a schedule built
+    over the global horizon make the resume bit-exact."""
+    from repro.launch.train import run
+    full_dir, kill_dir = str(tmp_path / "full"), str(tmp_path / "kill")
+    full = run(ARCH, steps=12, ckpt_every=4, ckpt_dir=full_dir, **TRAIN_KW)
+    with pytest.raises(ChaosKilled) as ei:
+        run(ARCH, steps=12, ckpt_every=4, ckpt_dir=kill_dir,
+            chaos=["kill@6"], **TRAIN_KW)
+    assert ei.value.code == KILL_EXIT_CODE
+    assert latest_step(kill_dir) == 4              # newest committed save
+    resumed = run(ARCH, steps=8, ckpt_every=4, ckpt_dir=kill_dir, **TRAIN_KW)
+    assert resumed["steps"] == list(range(4, 12))
+    assert resumed["losses"] == full["losses"][4:]  # bitwise, not approx
+
+
+def test_corrupt_checkpoint_restart_falls_back(tmp_path):
+    """corrupt@8 damages the step-8 save as it lands; the restart's
+    restore detects the CRC mismatch and resumes from step 4."""
+    from repro.launch.train import run
+    ckpt = str(tmp_path)
+    run(ARCH, steps=8, ckpt_every=4, ckpt_dir=ckpt,
+        chaos=["corrupt@8"], **TRAIN_KW)
+    assert latest_step(ckpt) == 8                  # manifest committed...
+    assert verified_steps(ckpt) == [4]             # ...but CRC rejects it
+    out = run(ARCH, steps=2, ckpt_every=100, ckpt_dir=ckpt, **TRAIN_KW)
+    assert out["steps"][0] == 4                    # fell back past step 8
+
+
+def test_nan_injection_skips_update_and_stays_finite():
+    """nan@3 scales grads by NaN for one step: the in-jit finite guard
+    must keep params byte-identical for that step (the next loss equals
+    what an update-free step would produce) and the loop records a skip."""
+    from repro.launch.train import run
+    out = run(ARCH, steps=8, chaos=["nan@3"], **TRAIN_KW)
+    assert [e for e in out["events"] if e["kind"] == "skip"] == [
+        {"kind": "skip", "step": 3}]
+    assert all(np.isfinite(out["losses"]))
+    # params were protected: the loss stream never went nonfinite and the
+    # post-skip loss continues from the pre-skip params
+    assert len(out["losses"]) == 8
+
+
+def test_silenced_host_evicted_and_loop_remeshes():
+    """silence@3:host=1 on a simulated 2-host fleet: the monitor evicts
+    the dark host, the loop re-plans the mesh over the survivor and runs
+    to completion."""
+    from repro.launch.train import run
+    out = run(ARCH, steps=10, n_hosts=2, hb_timeout_steps=3.0,
+              chaos=["silence@3:host=1"], **TRAIN_KW)
+    remesh = [e for e in out["events"] if e["kind"] == "remesh"]
+    assert len(remesh) == 1
+    assert remesh[0]["failed"] == [1]
+    assert remesh[0]["survivors"] == [0]
+    assert remesh[0]["plan"]["n_hosts"] == 1
+    assert out["steps"][-1] == 9                   # ran to the end
+    assert all(np.isfinite(out["losses"]))

@@ -340,6 +340,105 @@ def test_paged_pool_specs_shapes():
 
 
 # ---------------------------------------------------------------------------
+# graceful degradation: deadlines, admission retry/shed, load-shed mode
+# ---------------------------------------------------------------------------
+
+def test_paged_deadline_evicts_but_engine_keeps_serving():
+    """A request whose deadline passes mid-decode is evicted with its
+    partial output (outcome "timeout") while the other request runs to
+    completion — one stuck request cannot hold pages forever."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine("qwen3-4b", slots=2, max_len=48,
+                                 max_new=10, kv_mode="paged", page_size=8)
+    rng = np.random.default_rng(0)
+    doomed = engine.submit(rng.integers(0, vocab, 8).astype(np.int32),
+                           deadline=4)
+    healthy = engine.submit(rng.integers(0, vocab, 8).astype(np.int32))
+    res = engine.run()
+    assert engine.outcomes == {doomed: "timeout", healthy: "ok"}
+    assert 0 < len(res[doomed]) < 10               # partial output kept
+    assert len(res[healthy]) == 10
+    engine.kv.check_invariants()                   # pages were returned
+    stats = engine.degradation_stats()
+    assert stats["timeout"] == 1 and stats["ok"] == 1
+
+
+def test_admission_backoff_terminates_without_deadlock():
+    """With retry/backoff configured, a request that cannot fit yet stops
+    blocking the queue head, retries with exponential hold-off, and still
+    completes once capacity frees — no shed, no deadlock."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine("qwen3-4b", slots=2, max_len=48,
+                                 max_new=6, kv_mode="paged", page_size=8,
+                                 num_pages=7, max_admission_retries=0,
+                                 admission_backoff=1)
+    rng = np.random.default_rng(0)
+    for prio in (5, 5, 0):                         # third can't fit at first
+        engine.submit(rng.integers(0, vocab, 16).astype(np.int32),
+                      priority=prio)
+    res = engine.run()
+    assert len(res) == 3 and all(len(v) == 6 for v in res.values())
+    assert set(engine.outcomes.values()) == {"ok"}
+
+
+def test_admission_retry_budget_sheds():
+    """When the retry budget blows before capacity frees, the request is
+    SHED (outcome "shed", empty output) instead of waiting forever; the
+    admitted work is unaffected."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine("qwen3-4b", slots=2, max_len=64,
+                                 max_new=24, kv_mode="paged", page_size=8,
+                                 num_pages=11, max_admission_retries=2,
+                                 admission_backoff=1)
+    rng = np.random.default_rng(0)
+    a = engine.submit(rng.integers(0, vocab, 16).astype(np.int32), priority=5)
+    b = engine.submit(rng.integers(0, vocab, 16).astype(np.int32), priority=5)
+    c = engine.submit(rng.integers(0, vocab, 40).astype(np.int32), priority=0)
+    res = engine.run()
+    assert engine.outcomes[c] == "shed" and res[c] == []
+    assert engine.outcomes[a] == engine.outcomes[b] == "ok"
+    assert len(res[a]) == 24 and len(res[b]) == 24
+
+
+def test_load_shed_mode_under_sustained_pool_pressure():
+    """When the page pool stays critical for `shed_patience` consecutive
+    ticks, waiting sub-priority work is dropped wholesale; requests
+    already holding pages keep running."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine("qwen3-4b", slots=2, max_len=64,
+                                 max_new=24, kv_mode="paged", page_size=8,
+                                 num_pages=7, shed_pressure=0.9,
+                                 shed_patience=2, shed_min_priority=1)
+    rng = np.random.default_rng(0)
+    a = engine.submit(rng.integers(0, vocab, 16).astype(np.int32), priority=5)
+    b = engine.submit(rng.integers(0, vocab, 16).astype(np.int32), priority=5)
+    c = engine.submit(rng.integers(0, vocab, 16).astype(np.int32), priority=0)
+    res = engine.run()
+    assert engine.outcomes[c] == "shed"
+    assert engine.degradation_stats()["shed_mode_ticks"] >= 1
+    assert len(res[a]) == 24 and len(res[b]) == 24
+
+
+def test_dense_deadline_timeout():
+    """The dense path honours deadlines too: queued requests past deadline
+    never start; a decoding slot past deadline frees with its partial
+    output."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine("qwen3-4b", slots=1, max_len=48,
+                                 max_new=10)
+    rng = np.random.default_rng(0)
+    slow = engine.submit(rng.integers(0, vocab, 8).astype(np.int32),
+                         deadline=3)
+    queued = engine.submit(rng.integers(0, vocab, 8).astype(np.int32),
+                           deadline=2)            # expires before a slot frees
+    ok = engine.submit(rng.integers(0, vocab, 8).astype(np.int32))
+    res = engine.run()
+    assert engine.outcomes[slow] == "timeout" and 0 < len(res[slow]) < 10
+    assert engine.outcomes[queued] == "timeout" and res[queued] == []
+    assert engine.outcomes[ok] == "ok" and len(res[ok]) == 10
+
+
+# ---------------------------------------------------------------------------
 # sampling: temperature + top-k (seeded host RNG)
 # ---------------------------------------------------------------------------
 
