@@ -62,7 +62,8 @@ class _BundleAdapter:
 def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
                  max_len: int = 64, max_new: int = 8, kv_mode: str = "dense",
                  page_size: int = 16, num_pages: int | None = None,
-                 prefill_chunk: int = 32, seed: int = 0, mesh=None,
+                 prefill_chunk: int = 32, prefix_cache: bool = True,
+                 seed: int = 0, mesh=None,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0, **degrade):
     """(engine, vocab) ready for submit()/run() — shared by the launcher,
@@ -87,6 +88,7 @@ def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
         ServeConfig(batch=slots, max_len=max_len, max_new_tokens=max_new,
                     kv_mode=kv_mode, page_size=page_size,
                     num_pages=num_pages, prefill_chunk=prefill_chunk,
+                    prefix_cache=prefix_cache,
                     temperature=temperature, top_k=top_k,
                     sample_seed=sample_seed, **degrade),
         mesh=mesh)
@@ -97,23 +99,47 @@ def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
         slots: int = 4, prompt_len: int = 12, max_new: int = 8,
         max_len: int = 64, seed: int = 0, kv_mode: str = "dense",
         page_size: int = 16, num_pages: int | None = None,
-        temperature: float = 0.0, top_k: int = 0) -> dict:
+        prefix_cache: bool = True, prefix_share: float = 0.0,
+        temperature: float = 0.0, top_k: int = 0,
+        stream: bool = False) -> dict:
+    """Serve ``n_requests`` random prompts and return {rid: tokens}.
+
+    ``prefix_share`` > 0 gives that fraction of the requests a common
+    prompt prefix (half the prompt length) — the radix cache prefills it
+    once and maps it read-only for every later arrival, which the printed
+    ``prefix_hits``/``pages_shared`` counters make visible.  ``stream``
+    consumes request 0 through the per-token generator API instead of the
+    batch ``run()`` (the other requests still complete — streams drive
+    the same continuous-batching ticks)."""
     engine, vocab = build_engine(
         arch, smoke=smoke, slots=slots, max_len=max_len, max_new=max_new,
         kv_mode=kv_mode, page_size=page_size, num_pages=num_pages,
-        seed=seed, temperature=temperature, top_k=top_k, sample_seed=seed)
+        prefix_cache=prefix_cache, seed=seed, temperature=temperature,
+        top_k=top_k, sample_seed=seed)
     rng = np.random.default_rng(seed)
-    for _ in range(n_requests):
+    common = rng.integers(0, vocab, size=max(1, prompt_len // 2))
+    for i in range(n_requests):
         prompt = rng.integers(0, vocab, size=prompt_len).astype(np.int32)
+        if prefix_share > 0 and i % max(1, round(1 / prefix_share)) == 0:
+            prompt[:len(common)] = common
         engine.submit(prompt)
     t0 = time.time()
+    if stream:
+        first = [tok for tok in engine.stream(0)]
+        print(f"[serve:{kv_mode}] streamed req 0: {first}")
     results = engine.run()
     dt = time.time() - t0
     total_tokens = sum(len(v) for v in results.values())
     stats = engine.kv_stats()
-    print(f"[serve:{kv_mode}] {n_requests} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
-          f"kv_resident={stats['bytes_resident']/1e6:.2f}MB)")
+    line = (f"[serve:{kv_mode}] {n_requests} requests, {total_tokens} "
+            f"tokens in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
+            f"kv_resident={stats['bytes_resident']/1e6:.2f}MB)")
+    pstats = engine.prefix_stats() if kv_mode != "dense" else {}
+    if pstats:
+        line += (f" prefix_hits={pstats['hits']}/{pstats['lookups']} "
+                 f"matched_tokens={pstats['matched_tokens']} "
+                 f"cow={pstats['cow_copies']}")
+    print(line)
     return results
 
 
@@ -127,6 +153,15 @@ def main():
                     choices=("dense", "paged", "paged_int8"))
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--num-pages", type=int, default=None)
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="radix prefix sharing across requests (default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="fraction of requests given a common prompt prefix")
+    ap.add_argument("--stream", action="store_true",
+                    help="consume request 0 via the token-streaming API")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; > 0 samples from softmax(logits/T)")
     ap.add_argument("--top-k", type=int, default=0,
@@ -135,6 +170,8 @@ def main():
     results = run(a.arch, n_requests=a.requests, slots=a.slots,
                   max_new=a.max_new, kv_mode=a.kv_mode,
                   page_size=a.page_size, num_pages=a.num_pages,
+                  prefix_cache=a.prefix_cache, prefix_share=a.prefix_share,
+                  stream=a.stream,
                   temperature=a.temperature, top_k=a.top_k)
     for rid, toks in sorted(results.items()):
         print(f"  req {rid}: {toks}")

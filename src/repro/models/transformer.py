@@ -299,13 +299,19 @@ def paged_step(cfg: TransformerConfig, params: dict, tokens: jax.Array,
     """One paged serving step: scatter T new tokens' K/V into the pool and
     attend against each slot's paged history.
 
-    tokens: (B, T) — T > 1 is a chunked-prefill call, T == 1 a decode
-    tick; counts: (B,) valid tokens per row (<= T; rows with count 0 are
-    idle slots riding the SPMD step).  page_table: (B, max_pages_view)
-    physical page ids — the engine passes a power-of-two SLICE of the full
-    table covering the longest active slot, so gather/attention cost
-    scales with actual lengths, not max_len.  lengths: (B,) tokens cached
-    before this call.  Pad/idle writes are routed to trash page 0.
+    tokens: (B, T); counts: (B,) valid tokens per row (<= T; rows with
+    count 0 are idle slots riding the SPMD step).  Rows are INDEPENDENT,
+    so one call may mix prefill chunks (counts[b] > 1) and decode rows
+    (counts[b] == 1) — the engine's continuous-batching tick is exactly
+    such a merged call.  page_table: (B, max_pages_view) physical page
+    ids — the engine passes a power-of-two SLICE of the full table
+    covering the longest active slot, so gather/attention cost scales
+    with actual lengths, not max_len.  lengths: (B,) tokens cached before
+    this call; because positions derive from it, a row whose leading
+    pages were mapped read-only from the prefix cache simply starts with
+    lengths[b] == matched tokens and writes land mid-sequence (mid-page
+    included) in its first PRIVATE page — shared pages are never written.
+    Pad/idle writes are routed to trash page 0.
 
     Returns (logits (B, T, vocab), pool', lengths + counts)."""
     x = params["embed"][tokens]

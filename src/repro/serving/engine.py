@@ -15,15 +15,34 @@ Two KV modes behind one interface (``ServeConfig.kv_mode``):
     instead of a hardwired (L, B, ...) assumption.
 
 ``paged`` / ``paged_int8``
-    The block-pool path: K/V live in fixed-size pages allocated from a
-    global pool (``serving.kv.BlockPoolKV``), a phase-aware scheduler
-    (``serving.scheduler.PhaseScheduler``) disaggregates chunked prefill
-    from decode and preempts by page pressure, and every device step is
-    one jitted ``paged_step`` whose page-table view is sliced to a
-    power-of-two page bucket covering the longest ACTIVE slot — compute
+    The block-pool path, now a CONTINUOUS-BATCHING front-end: K/V live in
+    fixed-size refcounted pages allocated from a global pool
+    (``serving.kv.BlockPoolKV``), a radix prefix cache
+    (``serving.prefix.RadixPrefixCache``, on by default) deduplicates
+    shared prompt prefixes across requests — admission maps matched pages
+    read-only, copy-on-write covers mid-page divergence, and prefill
+    covers only the unmatched suffix — and the phase-aware scheduler
+    (``serving.scheduler.PhaseScheduler``) admits/evicts PER TICK.  Each
+    tick runs jitted ``paged_step`` over the pool's active rows grouped
+    by padded length — wide prefill chunks in one call, decode rows and
+    single-token cache-hit suffixes together in a ``T == 1`` call — so
+    rows join and leave freely: a row may be mid-prefill (a chunk of
+    ``counts[b]`` tokens) while its neighbours decode one token each — no
+    phase epochs, no prefill convoy.  The per-row next-token gather and
+    greedy argmax ride INSIDE the jitted step (one dispatch per call;
+    host-side gathers dominate tick time otherwise).  The page-table
+    view is sliced to a
+    power-of-two page bucket covering the longest ACTIVE slot so compute
     and resident KV bytes scale with real sequence lengths, not
     ``batch x max_len``.  ``paged_int8`` keeps the pool quantized with
     per-(token, head) scale tables.
+
+The engine's loop is exposed three ways: :meth:`run` drains everything
+(the batch API), :meth:`step`/:meth:`pending` advance one tick (the
+event-loop API the traffic benchmark drives), and :meth:`stream` returns
+a per-request token GENERATOR that pulls ticks on demand — cooperative
+streaming without threads, so interleaved consumers each see their tokens
+the tick they are produced.
 
 Sampling: greedy by default (``temperature == 0``); ``temperature`` plus
 optional ``top_k`` switch decode to seeded host-side softmax sampling
@@ -34,13 +53,14 @@ engine itself is host-side control logic and is exercised on CPU in tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .kv import BlockPoolKV, PagedKVConfig
+from .prefix import RadixPrefixCache
 from .scheduler import Phase, PhaseScheduler, Request, SchedulerConfig
 
 KV_MODES = ("dense", "paged", "paged_int8")
@@ -60,6 +80,7 @@ class ServeConfig:
     num_pages: int | None = None    # paged: pool size (None = dense capacity)
     prefill_chunk: int = 32         # paged: tokens per prefill call
     prefill_token_budget: int = 64  # paged: prefill tokens per tick
+    prefix_cache: bool = True       # paged: radix prefix sharing + COW
     min_prefill_bucket: int = 8     # dense: smallest padded prompt bucket
     # graceful degradation (all off by default = seed behaviour):
     max_admission_retries: int = 0  # shed a request after N failed admits
@@ -84,11 +105,42 @@ def _pow2_at_least(n: int, lo: int = 1) -> int:
     return b
 
 
+# Module-level jits shared by every engine instance (a per-engine closure
+# would give each engine its own compile cache, so benchmarks/tests that
+# build fresh engines over the same bundle would re-trace identical
+# shapes).  ``step`` is the bundle's paged_step, static so its identity
+# keys the cache.
+@jax.jit
+def _copy_pool_page(pool, src, dst):
+    """COW: copy one physical page (all layers, K+V+scales).  The page
+    ids ride as traced scalars so every copy reuses one trace."""
+    return {k: v.at[:, dst].set(v[:, src]) for k, v in pool.items()}
+
+
+def _pick_step(step, params, tokens, pool, pt, lens, counts):
+    """paged_step plus the per-row next-token gather (each row's logits
+    sit at ``counts[b] - 1``) and the greedy argmax, fused into ONE
+    jitted dispatch — doing the gather outside jit costs more host time
+    per tick than the step itself on small models."""
+    logits, pool, _ = step(params, tokens, pool, pt, lens, counts)
+    idx = jnp.maximum(counts, 1)[:, None, None] - 1
+    rows = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    return rows, jnp.argmax(rows, axis=-1), pool
+
+
+_pick_step = jax.jit(_pick_step, static_argnums=0)
+
+
 class ServingEngine:
     """bundle must provide: init_cache(batch, max_len), prefill(params,
     tokens, cache, **extras), decode_step(params, tokens, cache); the paged
     modes additionally need init_paged_pool / paged_step /
     supports_paged_kv (the transformer family; see configs/base.py)."""
+
+    # consecutive ticks with work queued but nothing executed before the
+    # engine declares the scheduler wedged (admission backoff can idle a
+    # bounded run of ticks legitimately)
+    STALL_LIMIT = 4096
 
     def __init__(self, bundle: Any, params: Any, cfg: ServeConfig,
                  mesh: Any = None):
@@ -103,6 +155,7 @@ class ServingEngine:
         self._next_id = 0
         self._pressure_ticks = 0             # consecutive critical ticks
         self._shed_mode_ticks = 0
+        self._stall_ticks = 0
         self._rng = np.random.default_rng(cfg.sample_seed)
         if cfg.kv_mode == "dense":
             self._init_dense()
@@ -139,7 +192,7 @@ class ServingEngine:
         return int(self._rng.choice(z.size, p=p / p.sum()))
 
     # ------------------------------------------------------------------
-    # intake
+    # intake + the three loop surfaces (run / step / stream)
     # ------------------------------------------------------------------
 
     def submit(self, prompt_tokens: np.ndarray, priority: int = 0,
@@ -174,11 +227,77 @@ class ServingEngine:
         self.sched.submit(req)
         return rid
 
+    def reset_serving_state(self) -> None:
+        """Drop all serving state — pool, scheduler, prefix trie, results,
+        tick/pressure counters — while KEEPING the engine's compiled jit
+        traces (they are keyed on the bundle, which survives the reset).
+        Benchmarks use this to absorb compilation in an unmeasured warm
+        pass and then measure a genuinely cold-cache serve: a fresh
+        engine would re-trace every shape, a reset one does not."""
+        self.results = {}
+        self.outcomes = {}
+        self._pressure_ticks = 0
+        self._shed_mode_ticks = 0
+        self._stall_ticks = 0
+        self._rng = np.random.default_rng(self.cfg.sample_seed)
+        if self.cfg.kv_mode == "dense":
+            self._init_dense()
+        else:
+            self._init_paged()
+
+    def pending(self) -> bool:
+        """Whether any submitted request is still queued or in flight."""
+        if self.cfg.kv_mode == "dense":
+            return bool(self.queue) or \
+                any(s.request_id is not None for s in self.slots)
+        return self.sched.has_work
+
+    def step(self) -> None:
+        """Advance the engine ONE tick: expire deadlines, admit/evict,
+        then one device step over the whole slot pool (prefill chunks and
+        decode rows share it in the paged modes).  The event-loop API —
+        callers interleave ``submit`` and ``step`` to serve an open-ended
+        arrival stream (see benchmarks/bench_traffic.py)."""
+        if self.cfg.kv_mode == "dense":
+            self._step_dense()
+        else:
+            self._step_paged()
+
     def run(self, cache=None) -> dict[int, list[int]]:
         """Drain every queued/active request to completion."""
+        if self.cfg.kv_mode == "dense" and cache is not None:
+            self._dense_cache = cache
+        while self.pending():
+            self.step()
+        return self.results
+
+    def stream(self, rid: int) -> Iterator[int]:
+        """Per-request token generator: yields ``rid``'s tokens as the
+        continuous-batching loop produces them, driving :meth:`step` on
+        demand when no new tokens are buffered.  Multiple streams
+        interleave cooperatively — each tick's tokens are visible to
+        every consumer immediately."""
+        sent = 0
+        while True:
+            done = rid in self.results
+            toks = self.results[rid] if done else self._partial_output(rid)
+            while sent < len(toks):
+                yield toks[sent]
+                sent += 1
+            if done:
+                return
+            if not self.pending():      # rid unknown / already reaped
+                return
+            self.step()
+
+    def _partial_output(self, rid: int) -> list[int]:
         if self.cfg.kv_mode == "dense":
-            return self._run_dense(cache)
-        return self._run_paged()
+            for s in self.slots:
+                if s.request_id == rid:
+                    return list(s.generated)
+            return []
+        req = self._requests.get(rid)
+        return req.output if req is not None else []
 
     # ------------------------------------------------------------------
     # dense path (seed behaviour + bucketed-jit prefill + declared axes)
@@ -189,6 +308,7 @@ class ServingEngine:
         self.slots = [_Slot() for _ in range(cfg.batch)]
         self.queue: list[tuple[int, np.ndarray, int, int | None]] = []
         self._dense_tick = 0
+        self._dense_cache = None
         self._decode = jax.jit(self.bundle.decode_step)
         self._cache_axes: dict | None = None
         self._prefill_template = None       # built lazily, reused forever
@@ -286,41 +406,39 @@ class ServingEngine:
                 self.outcomes[s.request_id] = "timeout"
                 self.slots[i] = _Slot()
 
-    def _run_dense(self, cache=None) -> dict[int, list[int]]:
+    def _step_dense(self) -> None:
         cfg = self.cfg
-        if cache is None:
-            cache = self.bundle.init_cache(cfg.batch, cfg.max_len)
-        while self.queue or any(s.request_id is not None for s in self.slots):
-            self._dense_tick += 1
-            self._expire_dense()
-            cache = self._admit(cache)
-            if not any(s.request_id is not None for s in self.slots):
+        if self._dense_cache is None:
+            self._dense_cache = self.bundle.init_cache(cfg.batch, cfg.max_len)
+        self._dense_tick += 1
+        self._expire_dense()
+        self._dense_cache = self._admit(self._dense_cache)
+        if not any(s.request_id is not None for s in self.slots):
+            return
+        # one decode tick for the whole pool
+        last = np.zeros((cfg.batch, 1), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.request_id is not None:
+                last[i, 0] = s.generated[-1]
+        logits, self._dense_cache = self._decode(
+            self.params, jnp.asarray(last), self._dense_cache)
+        # greedy: batch argmax on device, ints cross to host; sampled:
+        # one host copy of the active rows feeds the seeded picker
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)) \
+            if self._greedy else np.asarray(logits[:, 0])
+        for i, s in enumerate(self.slots):
+            if s.request_id is None:
                 continue
-            # one decode tick for the whole pool
-            last = np.zeros((cfg.batch, 1), np.int32)
-            for i, s in enumerate(self.slots):
-                if s.request_id is not None:
-                    last[i, 0] = s.generated[-1]
-            logits, cache = self._decode(self.params, jnp.asarray(last),
-                                         cache)
-            # greedy: batch argmax on device, ints cross to host; sampled:
-            # one host copy of the active rows feeds the seeded picker
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)) \
-                if self._greedy else np.asarray(logits[:, 0])
-            for i, s in enumerate(self.slots):
-                if s.request_id is None:
-                    continue
-                tok = int(nxt[i]) if self._greedy else self._pick(nxt[i])
-                s.generated.append(tok)
-                s.remaining -= 1
-                if s.remaining <= 0 or tok == cfg.eos_id:
-                    self.results[s.request_id] = s.generated
-                    self.outcomes[s.request_id] = "ok"
-                    self.slots[i] = _Slot()
-        return self.results
+            tok = int(nxt[i]) if self._greedy else self._pick(nxt[i])
+            s.generated.append(tok)
+            s.remaining -= 1
+            if s.remaining <= 0 or tok == cfg.eos_id:
+                self.results[s.request_id] = s.generated
+                self.outcomes[s.request_id] = "ok"
+                self.slots[i] = _Slot()
 
     # ------------------------------------------------------------------
-    # paged path (block pool + phase scheduler)
+    # paged path (block pool + prefix cache + continuous batching)
     # ------------------------------------------------------------------
 
     def _init_paged(self) -> None:
@@ -348,6 +466,10 @@ class ServingEngine:
             page_size=cfg.page_size, num_pages=num_pages,
             n_layers=mcfg.n_layers, kv_heads=mcfg.n_kv_heads,
             head_dim=mcfg.dh, kv_bytes=kv_bytes, quantize=quant))
+        # the radix prefix cache registers itself as the pool's reclaim
+        # hook: page pressure drains cold cached prefixes before anyone
+        # preempts a live request
+        self.prefix = RadixPrefixCache(self.kv) if cfg.prefix_cache else None
         self.sched = PhaseScheduler(SchedulerConfig(
             num_slots=cfg.batch, prefill_chunk=cfg.prefill_chunk,
             prefill_token_budget=cfg.prefill_token_budget,
@@ -366,7 +488,7 @@ class ServingEngine:
                     v, jax.sharding.NamedSharding(self.mesh, specs[k]))
                 for k, v in self.pool.items()}
         self._requests: dict[int, Request] = {}
-        self._step = jax.jit(self.bundle.paged_step)
+        self.cow_copies = 0
         self.ticks = 0
 
     def _pages_view(self, max_tokens: int) -> int:
@@ -376,27 +498,57 @@ class ServingEngine:
         per_slot = self.kv.cfg.pages_per_slot
         return min(per_slot, _pow2_at_least(self.kv.pages_for(max_tokens)))
 
-    def _exec_step(self, tokens: np.ndarray, slots: list[int],
-                   counts: np.ndarray, mp: int):
-        """Run one jitted paged_step over the given slot rows (inside the
-        ambient mesh context when the pool is sharded, so paged_step's
-        sharding constraints resolve)."""
+    def _mesh_ctx(self):
         from repro.runtime import compat
-        pt = jnp.asarray(self.kv.page_table[slots, :mp])
-        lens = jnp.asarray(self.kv.lengths[slots].astype(np.int32))
-        ctx = compat.set_mesh(self.mesh) if self.mesh is not None else None
+        return compat.set_mesh(self.mesh) if self.mesh is not None else None
+
+    def _exec_step(self, tokens: np.ndarray, counts: np.ndarray, mp: int):
+        """Run one jitted paged_step + row-gather + argmax over the whole
+        slot pool (inside the ambient mesh context when the pool is
+        sharded, so paged_step's sharding constraints resolve).  Returns
+        ``(rows, picked)``: each slot's next-token logits and their
+        argmax, both still on device."""
+        pt = self.kv.page_table[:, :mp]
+        lens = self.kv.lengths.astype(np.int32)
+        ctx = self._mesh_ctx()
         try:
             if ctx is not None:
                 ctx.__enter__()
-            logits, self.pool, _ = self._step(
-                self.params, jnp.asarray(tokens), self.pool, pt, lens,
-                jnp.asarray(counts, jnp.int32))
+            rows, picked, self.pool = _pick_step(
+                self.bundle.paged_step, self.params, tokens, self.pool,
+                pt, lens, counts.astype(np.int32))
         finally:
             if ctx is not None:
                 ctx.__exit__(None, None, None)
-        return logits
+        return rows, picked
+
+    def _exec_cow(self, req: Request) -> None:
+        """Execute a pending copy-on-write: duplicate the matched page's
+        KV into the request's first private page, then release the pin
+        admission held on the source."""
+        src, dst, _ = req.cow
+        ctx = self._mesh_ctx()
+        try:
+            if ctx is not None:
+                ctx.__enter__()
+            self.pool = _copy_pool_page(self.pool,
+                                        jnp.asarray(src, jnp.int32),
+                                        jnp.asarray(dst, jnp.int32))
+        finally:
+            if ctx is not None:
+                ctx.__exit__(None, None, None)
+        self.cow_copies += 1
+        self.sched._drop_cow(self.kv, req)
 
     def _finish(self, req: Request) -> None:
+        """Reap a completed request: adopt its cached pages into the
+        prefix trie (they outlive the request until page pressure evicts
+        them leaf-first), then release the slot."""
+        if self.prefix is not None:
+            n_cached = int(self.kv.lengths[req.slot])
+            seq = np.concatenate(
+                [req.prompt, np.asarray(req.generated, np.int32)])[:n_cached]
+            self.prefix.insert(seq, self.kv.slot_pages(req.slot), n_cached)
         self.results[req.rid] = req.output
         self.outcomes[req.rid] = "ok"
         self.sched.finish(self.kv, req)
@@ -421,65 +573,104 @@ class ServingEngine:
                 self.sched.shed_waiting(
                     below_priority=cfg.shed_min_priority)
 
-    def _run_paged(self) -> dict[int, list[int]]:
+    def _step_paged(self) -> None:
+        """One continuous-batching tick: admit (consulting the prefix
+        cache), execute pending COW copies, grow decode pages, then run
+        jitted ``paged_step`` over the tick's active rows grouped by
+        padded length — wide prefill chunks in one call, decode rows
+        (and single-token cache-hit suffix prefills) in a ``T == 1``
+        call that keeps the Pallas decode path and never pays the
+        chunk padding.  Requests join and leave the batch per tick;
+        there are no phase epochs."""
         cfg = self.cfg
-        max_ticks = 64 + 4 * sum(r.total_len for r in
-                                 self._requests.values())
-        while self.sched.has_work:
-            self.ticks += 1
-            if self.ticks > max_ticks:     # safety valve: scheduler bug
+        if not self.sched.has_work:
+            return
+        self.ticks += 1
+        self._degrade_tick()
+        admitted = self.sched.admit(self.kv, now=self.ticks,
+                                    prefix=self.prefix)
+        for req in admitted:
+            if req.cow is not None:
+                self._exec_cow(req)
+        shed = self.sched.drain_shed()
+        for req in shed:
+            self.results[req.rid] = req.output
+            self.outcomes[req.rid] = "shed"
+
+        # decode rows claim their next page BEFORE the batch is built —
+        # under page pressure this may evict actives (prefill included),
+        # so jobs are selected afterwards
+        self.sched.ensure_decode_pages(self.kv)
+        jobs = self.sched.prefill_jobs()
+        decoding = self.sched.decoding()
+        if not jobs and not decoding:
+            # stall valve: work is queued but nothing ran this tick
+            self._stall_ticks = 0 if (admitted or shed) else \
+                self._stall_ticks + 1
+            if self._stall_ticks > self.STALL_LIMIT:
                 raise RuntimeError("paged scheduler made no progress")
-            self._degrade_tick()
-            self.sched.admit(self.kv, now=self.ticks)
-            for req in self.sched.drain_shed():
-                self.results[req.rid] = req.output
-                self.outcomes[req.rid] = "shed"
+            return
+        self._stall_ticks = 0
 
-            # --- prefill phase: budgeted chunks -----------------------
-            for job in self.sched.prefill_jobs():
-                req, n = job.req, job.count
-                chunk = cfg.prefill_chunk
-                toks = np.zeros((1, chunk), np.int32)
-                toks[0, :n] = req.prompt[job.start:job.start + n]
-                mp = self._pages_view(int(self.kv.lengths[req.slot]) + chunk)
-                logits = self._exec_step(toks, [req.slot],
-                                         np.asarray([n]), mp)
-                self.kv.advance(req.slot, n)
-                self.sched.finish_prefill_chunk(req, n)
-                if req.phase is Phase.DECODE:
-                    nxt = self._pick(logits[0, n - 1])
-                    req.generated.append(nxt)
-                    if req.n_generated >= req.max_new_tokens or \
-                            nxt == cfg.eos_id:
-                        self._finish(req)
+        # group rows by padded length: wide chunks would drag decode rows
+        # through a T-padded trace (the T > 1 path attends with the XLA
+        # fallback over the whole page view), so decode only shares a
+        # call with prefills that are themselves single-token
+        chunk_t = _pow2_at_least(max((j.count for j in jobs), default=1))
+        if chunk_t == 1:
+            groups = [(jobs, decoding)]
+        else:
+            groups = [(jobs, []), ([], decoding)]
+        for g_jobs, g_decode in groups:
+            if g_jobs or g_decode:
+                self._exec_rows(g_jobs, g_decode)
 
-            # --- decode phase: one tick for the whole pool ------------
-            if not self.sched.decoding():
+    def _exec_rows(self, jobs, decoding) -> None:
+        """Build one padded (B, T) batch from the given prefill jobs +
+        decode rows, run it through ``paged_step``, and harvest: advance
+        lengths, sample next tokens, finish completed requests."""
+        cfg = self.cfg
+        B = cfg.batch
+        T = _pow2_at_least(max([j.count for j in jobs], default=1))
+        tokens = np.zeros((B, T), np.int32)
+        counts = np.zeros((B,), np.int32)
+        for j in jobs:
+            tokens[j.req.slot, :j.count] = \
+                j.req.prompt[j.start:j.start + j.count]
+            counts[j.req.slot] = j.count
+        for r in decoding:
+            tokens[r.slot, 0] = r.generated[-1]
+            counts[r.slot] = 1
+        mp = self._pages_view(max(
+            int(self.kv.lengths[s]) + int(counts[s])
+            for s in range(B) if counts[s] > 0))
+        rows_dev, picked_dev = self._exec_step(tokens, counts, mp)
+        picked = np.asarray(picked_dev) if self._greedy \
+            else np.asarray(rows_dev)
+
+        by_slot = {j.req.slot: j for j in jobs}
+        for slot in range(B):
+            if counts[slot] == 0:
                 continue
-            self.sched.ensure_decode_pages(self.kv)  # may evict under
-            decoding = self.sched.decoding()         # page pressure
-            if not decoding:
-                continue
-            B = cfg.batch
-            last = np.zeros((B, 1), np.int32)
-            counts = np.zeros((B,), np.int32)
-            for req in decoding:
-                last[req.slot, 0] = req.generated[-1]
-                counts[req.slot] = 1
-            mp = self._pages_view(
-                max(int(self.kv.lengths[r.slot]) + 1 for r in decoding))
-            logits = self._exec_step(last, list(range(B)), counts, mp)
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)) \
-                if self._greedy else np.asarray(logits[:, 0])
-            for req in decoding:
-                self.kv.advance(req.slot, 1)
-                tok = int(nxt[req.slot]) if self._greedy else \
-                    self._pick(nxt[req.slot])
-                req.generated.append(tok)
-                if req.n_generated >= req.max_new_tokens or \
-                        tok == cfg.eos_id:
-                    self._finish(req)
-        return self.results
+            job = by_slot.get(slot)
+            if job is not None:                      # prefill chunk
+                req = job.req
+                self.kv.advance(slot, job.count)
+                self.sched.finish_prefill_chunk(req, job.count)
+                if req.phase is not Phase.DECODE:
+                    continue                         # more chunks to go
+            else:                                    # decode row
+                req = next(r for r in decoding if r.slot == slot)
+                self.kv.advance(slot, 1)
+            tok = int(picked[slot]) if self._greedy \
+                else self._pick(picked[slot])
+            req.generated.append(tok)
+            if req.n_generated >= req.max_new_tokens or tok == cfg.eos_id:
+                self._finish(req)
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
 
     def degradation_stats(self) -> dict:
         """Outcome counters + load-shed bookkeeping (all modes)."""
@@ -488,6 +679,23 @@ class ServingEngine:
             counts[v] = counts.get(v, 0) + 1
         counts["shed_mode_ticks"] = self._shed_mode_ticks
         return counts
+
+    def prefix_stats(self) -> dict:
+        """Radix-cache counters (hit rate, matched tokens/pages, COW and
+        eviction counts); empty when the cache is off or the mode dense."""
+        if getattr(self, "prefix", None) is None:
+            return {}
+        st = self.prefix.stats()
+        st["cow_copies"] = self.cow_copies
+        return st
+
+    def check_kv(self) -> None:
+        """Full pool + trie invariant audit (tests): every page's refcount
+        must equal its slot mappings plus trie references."""
+        if getattr(self, "prefix", None) is not None:
+            self.prefix.check_invariants()
+        else:
+            self.kv.check_invariants()
 
     def kv_stats(self) -> dict:
         """Resident-KV accounting (benchmarks): paged modes report pool

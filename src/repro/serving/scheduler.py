@@ -6,7 +6,14 @@ phases per request:
 
   WAITING  -> admission by (priority desc, arrival asc); a request is only
               admitted when a slot is free AND the block pool can map its
-              whole prompt (plus one decode page of headroom).
+              whole prompt (plus one decode page of headroom).  Admission
+              CONSULTS THE PREFIX CACHE (``serving.prefix``) when one is
+              wired in: the longest cached prefix of the prompt is mapped
+              as read-only shared pages (plus an optional copy-on-write
+              page when the match ends mid-page), the slot's length starts
+              at the matched token count, and prefill covers only the
+              SUFFIX — a cache-hit request skips straight past its
+              matched prefix into chunked prefill of the rest.
   PREFILL  -> the prompt is consumed in fixed-size CHUNKS, budgeted per
               tick (``prefill_token_budget``), so one long prompt cannot
               starve the decode pool — the serving analogue of
@@ -16,10 +23,14 @@ phases per request:
               SPMD step regardless of occupancy, as before).
 
 Preemption: when the pool runs dry — either a high-priority arrival can't
-be admitted or a decoding slot needs its next page — the LOWEST-priority
-active request is evicted: its pages return to the free list and the
-request re-enters WAITING with its generated tokens folded into the prompt
-(vLLM-style recompute on re-admission).  Eviction never targets ANOTHER
+be admitted or a decoding slot needs its next page — cold prefix-cache
+pages are reclaimed FIRST (``BlockPoolKV.reserve`` runs the trie's
+leaf-first LRU eviction hook); only then is the LOWEST-priority active
+request evicted: its page REFERENCES are dropped (shared prefix pages
+only decref — pages still held by the trie or a peer request survive; see
+``BlockPoolKV.free_slot``) and the request re-enters WAITING with its
+generated tokens folded into the prompt (vLLM-style recompute on
+re-admission).  Eviction never targets ANOTHER
 request with priority >= the one that needs the pages; when no strictly
 lower-priority victim exists, a decoding slot that cannot grow evicts
 ITSELF (equal-priority peers keep their progress).
@@ -80,6 +91,11 @@ class Request:
     deadline_tick: int | None = None   # evict once engine tick passes this
     admit_attempts: int = 0            # failed admission tries so far
     next_admit_tick: int = 0           # backoff: don't retry before this
+    cow: tuple[int, int, int] | None = None
+    # ^ pending copy-on-write from a mid-page prefix-cache match:
+    #   (src page, dst page, valid tokens) — the ENGINE executes the
+    #   device copy before the request's first prefill chunk
+    matched_tokens: int = 0            # prefix-cache tokens served for free
 
     @property
     def n_generated(self) -> int:
@@ -148,6 +164,7 @@ class PhaseScheduler:
         return min(cands, key=lambda r: (r.priority, -r.arrival))
 
     def _evict(self, kv: BlockPoolKV, req: Request) -> None:
+        self._drop_cow(kv, req)
         kv.free_slot(req.slot, evicted=True)
         del self._active[req.slot]
         # recompute-on-readmission: generated tokens become prompt suffix
@@ -159,13 +176,23 @@ class PhaseScheduler:
             req.generated = []
         req.slot = -1
         req.prefill_pos = 0
+        req.matched_tokens = 0
         req.preemptions += 1
         self.submit(req)
 
-    def admit(self, kv: BlockPoolKV, *, now: int = 0) -> list[Request]:
+    def admit(self, kv: BlockPoolKV, *, now: int = 0,
+              prefix=None) -> list[Request]:
         """Admit waiting requests in priority order; may evict lower-
         priority active requests when the pool is the binding constraint.
         Returns the newly admitted requests (now in PREFILL phase).
+
+        ``prefix`` (a :class:`~repro.serving.prefix.RadixPrefixCache`)
+        lets admission skip cached work: matched full pages are mapped
+        shared, only the suffix needs private pages, and the request's
+        ``prefill_pos``/slot length start at the matched token count.  A
+        mid-page match is planned as a COW job on ``req.cow`` for the
+        engine.  Page pressure drains cold cache pages (``kv.reserve``'s
+        reclaim hook) before any live request is preempted.
 
         With ``admission_backoff``/``max_admission_retries`` configured, a
         request that fails admission no longer blocks the queue head: it is
@@ -185,17 +212,30 @@ class PhaseScheduler:
             if req.next_admit_tick > now:        # backing off
                 deferred.append(item)
                 continue
-            need = kv.pages_for(len(req.prompt)) + \
+            match = prefix.match(req.prompt) if prefix is not None else None
+            shared = list(match.full_pages) if match is not None else []
+            # PIN the matched pages (and a COW source) for the duration of
+            # this attempt: the reclaim hook below must not evict the very
+            # pages the match promised
+            pinned = list(shared)
+            if match is not None and match.cow is not None:
+                pinned.append(match.cow[0])
+            for p in pinned:
+                kv.retain(p)
+            need = kv.pages_for(len(req.prompt)) - len(shared) + \
                 self.cfg.decode_headroom_pages
-            # page pressure: evict strictly-lower-priority work first
-            while (not kv.can_alloc(need)) or \
+            # page pressure: reclaim cold cache pages (reserve's hook),
+            # then evict strictly-lower-priority work
+            while (not kv.reserve(need)) or \
                     (len(self._active) >= self.cfg.num_slots):
                 victim = self._evictable_below(req.priority)
                 if victim is None:
                     break
                 self._evict(kv, victim)
-            if not kv.can_alloc(need) or \
+            if not kv.reserve(need) or \
                     len(self._active) >= self.cfg.num_slots:
+                for p in pinned:
+                    kv.release(p)
                 if not retrying:
                     deferred.append(item)
                     break                        # seed: head blocks
@@ -211,17 +251,40 @@ class PhaseScheduler:
                 continue
             slot = next(i for i in range(self.cfg.num_slots)
                         if i not in self._active)
+            if shared:
+                kv.map_shared(slot, shared)
             kv.ensure(slot, len(req.prompt) +
                       self.cfg.decode_headroom_pages * kv.cfg.page_size)
+            matched = match.matched if match is not None else 0
+            kv.set_length(slot, matched)
+            req.matched_tokens = matched
+            if match is not None and match.cow is not None:
+                # the COW source keeps ITS pin until the engine copies it
+                # (consume_cow / _drop_cow release); the destination is
+                # the request's first private page
+                src, n_valid = match.cow
+                dst = int(kv.page_table[slot, len(shared)])
+                req.cow = (src, dst, n_valid)
+                pinned.remove(src)
+            for p in pinned:
+                kv.release(p)        # slot mapping holds its own reference
             req.slot = slot
             req.phase = Phase.PREFILL
-            req.prefill_pos = 0
+            req.prefill_pos = matched
             req.admit_attempts = 0
             self._active[slot] = req
             admitted.append(req)
         for item in deferred:
             heapq.heappush(self._waiting, item)
         return admitted
+
+    @staticmethod
+    def _drop_cow(kv: BlockPoolKV, req: Request) -> None:
+        """Release a pending COW job's pin on its source page (the job is
+        consumed by the engine's copy, or abandoned on evict/expiry)."""
+        if req.cow is not None:
+            kv.release(req.cow[0])
+            req.cow = None
 
     # -- degradation: deadlines, shedding -----------------------------------
 
@@ -233,6 +296,7 @@ class PhaseScheduler:
         expired: list[Request] = []
         for req in list(self._active.values()):
             if req.deadline_tick is not None and now >= req.deadline_tick:
+                self._drop_cow(kv, req)
                 kv.free_slot(req.slot, evicted=True)
                 del self._active[req.slot]
                 req.slot = -1

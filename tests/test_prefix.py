@@ -1,0 +1,314 @@
+"""Property/differential tests for the radix prefix cache + refcounted pool.
+
+Host-side only (the prefix cache and block pool are deliberately jax-free)
+so hundreds of random lifecycles run in milliseconds.  The invariants under
+test, maintained across ANY interleaving of insert / match / map_shared /
+ensure / advance / free_slot / evict:
+
+  * every page's refcount equals its slot-table mappings plus its trie
+    references (``BlockPoolKV.check_invariants(external_refs=...)``);
+  * free pages + referenced pages partition the pool exactly (no leak, no
+    double-free, trash page 0 never circulates);
+  * no trie node outlives its page's refcount — eviction only ever drops
+    pages the trie alone holds (refcount 1);
+  * copy-on-write never mutates a shared page: the COW destination is
+    always a PRIVATE page (refcount 1) and a slot's write positions never
+    reach its read-only shared prefix.
+
+The hypothesis suite (skipped when hypothesis is not installed — CI
+installs it, the pinned-jax images may not) drives the same model with
+minimized counterexamples; the seeded-numpy sweep below always runs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serving.kv import BlockPoolKV, PagedKVConfig
+from repro.serving.prefix import RadixPrefixCache
+
+PAGE = 4
+
+
+def _pool(num_pages=16, num_slots=3, page_size=PAGE, max_len=64):
+    kv = BlockPoolKV(PagedKVConfig(
+        num_slots=num_slots, max_len=max_len, page_size=page_size,
+        num_pages=num_pages))
+    return kv, RadixPrefixCache(kv)
+
+
+def _cache_seq(kv, pc, tokens, slot=0):
+    """Cold-path lifecycle: compute ``tokens`` into ``slot`` and adopt the
+    pages into the trie (what the engine does on request finish)."""
+    kv.ensure(slot, len(tokens))
+    kv.advance(slot, len(tokens))
+    adopted = pc.insert(tokens, kv.slot_pages(slot), len(tokens))
+    kv.free_slot(slot)
+    pc.check_invariants()
+    return adopted
+
+
+# ---------------------------------------------------------------------------
+# unit: match / insert / COW planning
+# ---------------------------------------------------------------------------
+
+def test_match_full_pages_and_mid_page_cow():
+    kv, pc = _pool()
+    seq = list(range(8))                       # two full pages
+    assert _cache_seq(kv, pc, seq) == 2
+    # prompt strictly longer: both pages match in full
+    m = pc.match(seq + [99])
+    assert len(m.full_pages) == 2 and m.matched == 8 and m.cow is None
+    # prompt == cached seq: the last token must be recomputed, so only one
+    # full page matches and the second is served by COW (3 valid tokens)
+    m = pc.match(seq)
+    assert len(m.full_pages) == 1 and m.matched_full == 4
+    assert m.cow is not None and m.cow[1] == 3
+    assert m.matched == 7
+    # divergence inside page 2 -> COW with the common-overlap length
+    m = pc.match([0, 1, 2, 3, 4, 5, 77, 88, 99])
+    assert m.matched_full == 4 and m.cow[1] == 2
+    # cold prompt: miss
+    assert not pc.match([42, 43, 44, 45, 46]).hit
+    assert pc.stats()["hits"] == 3
+
+
+def test_match_never_covers_whole_prompt():
+    kv, pc = _pool()
+    _cache_seq(kv, pc, list(range(12)))
+    for n in (2, 5, 8, 12):
+        m = pc.match(list(range(n)))
+        assert m.matched < n        # >= 1 token always left to prefill
+
+
+def test_insert_dedup_and_partial_tail_subsumption():
+    kv, pc = _pool()
+    seq = list(range(10))
+    _cache_seq(kv, pc, seq)                        # 2 full + 1 partial(2)
+    assert pc.n_pages == 3
+    # identical sequence from another request: nothing new to adopt, and
+    # the duplicate slot pages go back to the free list on release
+    free_before = kv.free_pages
+    assert _cache_seq(kv, pc, seq, slot=1) == 0
+    assert kv.free_pages == free_before and pc.n_pages == 3
+    # a shorter partial tail subsumed by the cached one is also skipped
+    assert _cache_seq(kv, pc, list(range(9)), slot=2) == 0
+    # but a LONGER partial tail is a distinct node alongside it
+    assert _cache_seq(kv, pc, list(range(11)), slot=1) == 1
+    pc.check_invariants()
+
+
+def test_evict_lru_leaf_first():
+    kv, pc = _pool(num_pages=32)
+    a = list(range(0, 8))                      # branch A, 2 pages
+    b = list(range(8, 20))                     # branch B, 3 pages
+    _cache_seq(kv, pc, a)
+    _cache_seq(kv, pc, b, slot=1)
+    pc.match(a + [99])                         # touch A: B becomes LRU
+    held = pc.n_pages
+    assert pc.evict(1) == 1                    # B's LEAF page goes first
+    assert pc.n_pages == held - 1
+    assert pc.match(b[:9]).matched_full == 8   # B's first 2 pages survive
+    # drain everything: leaf-first along cold paths, A last
+    assert pc.evict(100) == held - 1
+    assert pc.n_pages == 0 and kv.free_pages == kv.cfg.total_pages - 1
+    pc.check_invariants()
+
+
+def test_evict_skips_pages_mapped_by_live_slots():
+    kv, pc = _pool()
+    seq = list(range(8))
+    _cache_seq(kv, pc, seq)
+    m = pc.match(seq + [99])
+    kv.map_shared(1, list(m.full_pages))       # live slot maps both pages
+    assert pc.evict(10) == 0                   # nothing evictable
+    kv.free_slot(1)
+    assert pc.evict(10) == 2                   # now the trie alone holds them
+    pc.check_invariants()
+
+
+def test_reserve_drains_trie_through_reclaim_hook():
+    kv, pc = _pool(num_pages=9)                # 8 usable
+    _cache_seq(kv, pc, list(range(16)))        # trie holds 4 pages
+    _cache_seq(kv, pc, list(range(100, 116)))  # + 4 more: pool exhausted
+    assert kv.free_pages == 0
+    assert kv.reserve(3)                       # hook evicts cold leaves
+    assert kv.free_pages >= 3
+    assert kv.reserve(8)                       # drains the whole cache
+    assert pc.n_pages == 0
+    pc.check_invariants()
+
+
+def test_ensure_reclaims_before_memory_error():
+    kv, pc = _pool(num_pages=9)
+    _cache_seq(kv, pc, list(range(32)))        # 8 pages, all trie-held
+    kv.ensure(0, 12)                           # needs 3: evicts, no raise
+    assert len(kv.slot_pages(0)) == 3
+    pc.check_invariants()
+    kv.free_slot(0)
+
+
+def test_cow_source_pin_survives_reclaim():
+    kv, pc = _pool(num_pages=9)
+    seq = list(range(8))
+    _cache_seq(kv, pc, seq)
+    m = pc.match(seq)                          # full page + COW(page2, 3)
+    src = m.cow[0]
+    kv.retain(src)                             # admission pins the source
+    assert kv.reserve(8) is False              # reclaim evicts all it can
+    assert kv.refcount[src] >= 1               # ...but not the pinned page
+    kv.release(src)
+    pc.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# randomized model: full request lifecycles against the pool + trie
+# ---------------------------------------------------------------------------
+
+class _Model:
+    """Drives BlockPoolKV + RadixPrefixCache exactly as the scheduler and
+    engine do (pin matched pages, map shared, COW into the first private
+    page, advance, finish-with-insert), checking every invariant after
+    every operation."""
+
+    VOCAB = 3        # tiny vocab -> heavy prefix collisions
+
+    def __init__(self, rng, num_pages, num_slots=3):
+        self.rng = rng
+        self.kv, self.pc = _pool(num_pages=num_pages, num_slots=num_slots,
+                                 max_len=32)
+        self.live = {}                         # slot -> token list
+        self.num_slots = num_slots
+
+    def check(self):
+        self.pc.check_invariants()
+
+    def op_admit(self):
+        free = [s for s in range(self.num_slots) if s not in self.live]
+        if not free:
+            return
+        slot = free[0]
+        n = int(self.rng.integers(2, 17))
+        tokens = self.rng.integers(0, self.VOCAB, n).tolist()
+        kv, pc = self.kv, self.pc
+        m = pc.match(tokens)
+        shared = list(m.full_pages)
+        pinned = shared + ([m.cow[0]] if m.cow else [])
+        for p in pinned:
+            kv.retain(p)
+        need = kv.pages_for(n) - len(shared) + 1
+        if not kv.reserve(need):
+            for p in pinned:
+                kv.release(p)
+            self.check()
+            return
+        if shared:
+            kv.map_shared(slot, shared)
+            # the shared prefix is strictly before any write position
+            assert len(shared) * PAGE <= m.matched
+        kv.ensure(slot, n + PAGE)
+        kv.set_length(slot, m.matched)
+        if m.cow is not None:
+            # COW destination = first private page: must be exclusive
+            dst = int(kv.page_table[slot, len(shared)])
+            assert kv.refcount[dst] == 1, "COW would write a shared page"
+            assert dst != m.cow[0]
+        for p in pinned:
+            kv.release(p)
+        kv.advance(slot, n - m.matched)        # suffix prefill
+        self.live[slot] = tokens
+        self.check()
+
+    def op_decode(self):
+        if not self.live:
+            return
+        slot = int(self.rng.choice(list(self.live)))
+        kv = self.kv
+        tok = int(self.rng.integers(0, self.VOCAB))
+        try:
+            kv.ensure(slot, int(kv.lengths[slot]) + 1)
+        except MemoryError:
+            # page pressure with everything pinned by live slots: the
+            # scheduler would preempt; the model just drops the request
+            kv.free_slot(slot, evicted=True)
+            del self.live[slot]
+            self.check()
+            return
+        kv.advance(slot, 1)
+        self.live[slot].append(tok)
+        self.check()
+
+    def op_finish(self):
+        if not self.live:
+            return
+        slot = int(self.rng.choice(list(self.live)))
+        kv, pc = self.kv, self.pc
+        n = int(kv.lengths[slot])
+        pc.insert(self.live[slot][:n], kv.slot_pages(slot), n)
+        kv.free_slot(slot)
+        del self.live[slot]
+        self.check()
+
+    def op_evict_request(self):
+        if not self.live:
+            return
+        slot = int(self.rng.choice(list(self.live)))
+        self.kv.free_slot(slot, evicted=True)
+        del self.live[slot]
+        self.check()
+
+    def op_reclaim(self):
+        self.pc.evict(int(self.rng.integers(1, 4)))
+        self.check()
+
+    def run(self, steps):
+        ops = [self.op_admit, self.op_admit, self.op_decode, self.op_decode,
+               self.op_finish, self.op_evict_request, self.op_reclaim]
+        for _ in range(steps):
+            ops[int(self.rng.integers(0, len(ops)))]()
+        # teardown: everything drains back to an empty pool
+        for slot in list(self.live):
+            self.kv.free_slot(slot)
+        self.live.clear()
+        self.pc.evict(10 ** 6)
+        assert self.pc.n_pages == 0
+        assert self.kv.free_pages == self.kv.cfg.total_pages - 1
+        self.check()
+
+
+def test_random_lifecycles_seeded_sweep():
+    """200+ random insert/match/COW/advance/release/evict sequences (the
+    always-on counterpart of the hypothesis suite below)."""
+    for seed in range(200):
+        rng = np.random.default_rng(seed)
+        _Model(rng, num_pages=int(rng.integers(8, 28))).run(steps=50)
+
+
+def test_random_lifecycles_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=200, deadline=None)
+    @hyp.given(seed=st.integers(0, 2 ** 31 - 1),
+               num_pages=st.integers(8, 40),
+               steps=st.integers(1, 80))
+    def drive(seed, num_pages, steps):
+        _Model(np.random.default_rng(seed), num_pages=num_pages).run(steps)
+
+    drive()
+
+
+def test_refcount_misuse_raises():
+    kv, pc = _pool()
+    with pytest.raises(ValueError):
+        kv.retain(BlockPoolKV.TRASH)
+    with pytest.raises(ValueError):
+        kv.retain(3)                           # unallocated
+    with pytest.raises(ValueError):
+        kv.release(3)
+    kv.ensure(0, 4)
+    page = kv.slot_pages(0)[0]
+    kv.retain(page)                            # trie-style second ref
+    assert kv.free_slot(0) == 0                # still referenced: not freed
+    assert kv.release(page)                    # last ref -> free list
+    kv.check_invariants()

@@ -14,8 +14,8 @@ import numpy as np
 import pytest
 
 from repro.serving import (BlockPoolKV, PagedKVConfig, Phase, PhaseScheduler,
-                           Request, SchedulerConfig, ServeConfig,
-                           ServingEngine)
+                           RadixPrefixCache, Request, SchedulerConfig,
+                           ServeConfig, ServingEngine)
 
 
 # ---------------------------------------------------------------------------
@@ -483,3 +483,301 @@ def test_sampling_paged_mode_seeded():
         return engine.run()
 
     assert serve(seed=2) == serve(seed=2)
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: differential correctness (cache-on == cache-off, exactly)
+# ---------------------------------------------------------------------------
+
+def _prefix_prompts(vocab, n=5, prefix_len=16, seed=7):
+    """n prompts sharing a `prefix_len`-token common prefix (two full
+    pages at page_size=8) with short random suffixes."""
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, vocab, prefix_len)
+    return [np.concatenate(
+        [common, rng.integers(0, vocab, int(rng.integers(3, 10)))]
+    ).astype(np.int32) for _ in range(n)]
+
+
+def _serve_cached(arch, kv_mode, prompts, prefix_cache, **kw):
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine(arch, slots=2, max_len=64, max_new=6,
+                                 kv_mode=kv_mode, page_size=8,
+                                 prefix_cache=prefix_cache, **kw)
+    for p in prompts:
+        engine.submit(p)
+    return engine.run(), engine
+
+
+@pytest.mark.parametrize("kv_mode", ["paged", "paged_int8"])
+def test_prefix_cache_differential_token_exact(kv_mode):
+    """Shared-prefix requests served THROUGH the radix cache produce
+    token-identical outputs to the cold path (cache disabled) — the
+    matched prefix's KV pages really are the same computation."""
+    vocab = 256
+    prompts = _prefix_prompts(vocab)
+    hot, eng = _serve_cached("qwen3-4b", kv_mode, prompts, True)
+    cold, _ = _serve_cached("qwen3-4b", kv_mode, prompts, False)
+    assert hot == cold
+    st = eng.prefix_stats()
+    assert st["hits"] >= 3 and st["matched_tokens"] > 0
+    assert eng.kv.stats()["shares"] >= 2      # >= one 2-page shared mapping
+    eng.check_kv()
+
+
+def test_prefix_cache_matches_dense_golden():
+    """The cached paged path stays exactly equal to the DENSE engine (the
+    no-pool golden): dense == paged(cache off) == paged(cache on)."""
+    vocab = 256
+    prompts = _prefix_prompts(vocab, seed=11)
+    dense, _ = _serve_cached("qwen3-4b", "dense", prompts, False)
+    hot, eng = _serve_cached("qwen3-4b", "paged", prompts, True)
+    assert hot == dense
+    assert eng.prefix_stats()["hits"] >= 1
+
+
+def test_prefix_cache_cow_divergence_matches_cold():
+    """A prompt diverging MID-PAGE from a cached sequence triggers
+    copy-on-write (private copy of the partially matched page) and still
+    decodes token-identically to the cold path."""
+    from repro.launch.serve import build_engine
+    rng = np.random.default_rng(13)
+    vocab = 256
+    common = rng.integers(0, vocab, 16)
+    a = np.concatenate([common, rng.integers(0, vocab, 6)]).astype(np.int32)
+    b = np.concatenate([common[:10],                   # diverge at token 10
+                        rng.integers(0, vocab, 8)]).astype(np.int32)
+
+    def serve_seq(prefix_cache):
+        engine, _ = build_engine("qwen3-4b", slots=2, max_len=64, max_new=6,
+                                 kv_mode="paged", page_size=8,
+                                 prefix_cache=prefix_cache)
+        engine.submit(a)
+        engine.run()                  # a finishes -> pages enter the trie
+        engine.submit(b)
+        return engine.run(), engine
+
+    hot, eng = serve_seq(True)
+    cold, _ = serve_seq(False)
+    assert hot == cold
+    assert eng.cow_copies >= 1                   # the device copy ran
+    assert eng.prefix_stats()["cow_count"] >= 1
+    # b matched one full page + 2 tokens of the diverging page
+    assert eng._requests[1].matched_tokens == 10
+    eng.check_kv()
+
+
+def test_prefix_cache_page_dedup_under_shared_load():
+    """With many live shared-prefix requests, the pool holds each prefix
+    page ONCE (refcount > 1) — the dedup the traffic benchmark measures."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine("qwen3-4b", slots=4, max_len=64, max_new=4,
+                                 kv_mode="paged", page_size=8)
+    prompts = _prefix_prompts(vocab, n=6, seed=23)
+    for p in prompts:
+        engine.submit(p)
+    shared_seen = 0
+    while engine.pending():
+        engine.step()
+        shared_seen = max(shared_seen, engine.kv.stats()["pages_shared"])
+    assert shared_seen >= 2        # both prefix pages lived shared at once
+    engine.check_kv()
+
+
+def test_token_streaming_matches_batch_run():
+    """The per-request stream() generators, consumed interleaved, drive
+    the same continuous-batching ticks and yield exactly the tokens the
+    batch run() API returns."""
+    from repro.launch.serve import build_engine
+
+    def build(submit_all=True):
+        engine, vocab = build_engine("qwen3-4b", slots=2, max_len=48,
+                                     max_new=5, kv_mode="paged", page_size=8)
+        rng = np.random.default_rng(31)
+        rids = [engine.submit(rng.integers(0, vocab, 7 + i).astype(np.int32))
+                for i in range(3)]
+        return engine, rids
+
+    engine, rids = build()
+    golden = engine.run()
+
+    engine, rids = build()
+    gens = {rid: engine.stream(rid) for rid in rids}
+    got = {rid: [] for rid in rids}
+    live = dict(gens)
+    while live:                      # round-robin the consumers
+        for rid, g in list(live.items()):
+            try:
+                got[rid].append(next(g))
+            except StopIteration:
+                del live[rid]
+    assert got == golden
+
+
+# ---------------------------------------------------------------------------
+# regression: preemption of a request holding SHARED prefix pages
+# ---------------------------------------------------------------------------
+
+def test_preemption_shared_prefix_pages_only_decref():
+    """Eviction under page pressure used to assume the victim owned its
+    pages exclusively and returned them all to the free list; a victim
+    whose leading pages are radix-cache mappings shared with the trie and
+    a live peer must only DROP ITS REFERENCES — the peer keeps decoding
+    from the same physical pages and the cache stays intact."""
+    kv = BlockPoolKV(_kvcfg(num_slots=3, num_pages=17))
+    pc = RadixPrefixCache(kv)
+    prefix = list(range(16))                      # two full pages
+    kv.ensure(0, 16)
+    kv.advance(0, 16)
+    pc.insert(prefix, kv.slot_pages(0), 16)
+    kv.free_slot(0)
+
+    sched = PhaseScheduler(SchedulerConfig(num_slots=3))
+    r1 = Request(rid=1, prompt=np.asarray(prefix + [7, 8], np.int32),
+                 arrival=0, max_new_tokens=4)
+    r2 = Request(rid=2, prompt=np.asarray(prefix + [9], np.int32),
+                 arrival=1, max_new_tokens=4)
+    sched.submit(r1)
+    sched.submit(r2)
+    assert len(sched.admit(kv, prefix=pc)) == 2
+    shared = [int(p) for p in kv.slot_pages(r1.slot)[:2]]
+    assert shared == [int(p) for p in kv.slot_pages(r2.slot)[:2]]
+    assert all(kv.refcount[p] == 3 for p in shared)   # trie + r1 + r2
+    r2_pages = kv.slot_pages(r2.slot)
+    free_before = kv.free_pages
+
+    sched._evict(kv, r1)                          # preempt the sharer
+    # ONLY r1's references dropped: shared pages never hit the free list
+    assert all(kv.refcount[p] == 2 for p in shared)
+    assert kv.slot_pages(r2.slot) == r2_pages     # peer untouched
+    # exactly r1's PRIVATE pages came back (prompt 18 tokens -> 3 pages
+    # + 1 headroom, minus the 2 shared)
+    assert kv.free_pages == free_before + 2
+    assert pc.match(prefix + [55]).matched_full == 16   # cache intact
+    pc.check_invariants()
+    # drain: peer finishes, trie evicts -> pool returns to empty
+    sched.finish(kv, r2)
+    assert all(kv.refcount[p] == 1 for p in shared)
+    pc.evict(100)
+    assert kv.free_pages == kv.cfg.total_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler fuzz: random arrival/length/priority streams
+# ---------------------------------------------------------------------------
+
+def _fuzz_scheduler_trace(seed, n_requests=None, ticks_cap=4000):
+    """Host-level lifecycle sim mirroring the engine's tick loop (no jax):
+    random arrivals/lengths/priorities/deadlines with the prefix cache in
+    the loop, invariant-checked every tick.  Returns outcome counts."""
+    rng = np.random.default_rng(seed)
+    num_pages = int(rng.integers(10, 22))
+    kv = BlockPoolKV(PagedKVConfig(num_slots=3, max_len=48, page_size=8,
+                                   num_pages=num_pages))
+    pc = RadixPrefixCache(kv)
+    sched = PhaseScheduler(SchedulerConfig(
+        num_slots=3, prefill_chunk=8, prefill_token_budget=16,
+        max_admission_retries=int(rng.integers(0, 3)),
+        admission_backoff=int(rng.integers(0, 3))))
+    n_requests = n_requests or int(rng.integers(4, 14))
+    common = rng.integers(0, 4, 12).tolist()      # tiny vocab: collisions
+    pending = []
+    for rid in range(n_requests):
+        plen = int(rng.integers(2, 20))
+        prompt = rng.integers(0, 4, plen).tolist()
+        if rng.random() < 0.5:                    # half share a prefix
+            k = min(plen - 1, int(rng.integers(1, 13)))
+            prompt[:k] = common[:k]
+        pending.append((int(rng.integers(0, 12)), Request(
+            rid=rid, prompt=np.asarray(prompt, np.int32),
+            priority=int(rng.integers(0, 3)), arrival=rid,
+            max_new_tokens=int(rng.integers(1, 7)),
+            deadline_tick=None if rng.random() < 0.7
+            else int(rng.integers(4, 40)))))
+    outcomes = {}
+
+    def finish(req):
+        n = int(kv.lengths[req.slot])
+        seq = list(req.prompt) + req.generated
+        pc.insert(seq[:n], kv.slot_pages(req.slot), n)
+        outcomes[req.rid] = "ok"
+        sched.finish(kv, req)
+
+    tick = 0
+    while pending or sched.has_work:
+        tick += 1
+        assert tick < ticks_cap, "scheduler starved a request"
+        while pending and pending[0][0] <= tick:
+            sched.submit(pending.pop(0)[1])
+        for req in sched.expire_deadlines(kv, tick):
+            outcomes[req.rid] = "timeout"
+        admitted = sched.admit(kv, now=tick, prefix=pc)
+        for req in admitted:
+            PhaseScheduler._drop_cow(kv, req)     # "engine" copies at once
+        for req in sched.drain_shed():
+            outcomes[req.rid] = "shed"
+        sched.ensure_decode_pages(kv)
+        decoding = sched.decoding()
+        for job in sched.prefill_jobs():
+            kv.advance(job.req.slot, job.count)
+            sched.finish_prefill_chunk(job.req, job.count)
+            if job.req.phase is Phase.DECODE:
+                job.req.generated.append(int(rng.integers(0, 4)))
+                if job.req.n_generated >= job.req.max_new_tokens:
+                    finish(job.req)
+        for req in decoding:
+            if req.slot < 0 or sched._active.get(req.slot) is not req:
+                continue                          # evicted this tick
+            kv.advance(req.slot, 1)
+            req.generated.append(int(rng.integers(0, 4)))
+            if req.n_generated >= req.max_new_tokens:
+                finish(req)
+        pc.check_invariants()
+    # accounting: every submitted request reached exactly one outcome
+    assert sorted(outcomes) == list(range(n_requests))
+    # drain the cache: every page accounted for, none leaked
+    pc.evict(10 ** 6)
+    assert kv.free_pages == kv.cfg.total_pages - 1
+    return outcomes
+
+
+def test_scheduler_fuzz_seeded_sweep():
+    for seed in range(60):
+        _fuzz_scheduler_trace(seed)
+
+
+def test_scheduler_fuzz_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=200, deadline=None)
+    @hyp.given(seed=st.integers(0, 2 ** 31 - 1), n=st.integers(1, 14))
+    def drive(seed, n):
+        _fuzz_scheduler_trace(seed, n_requests=n)
+
+    drive()
+
+
+def test_engine_fuzz_outcomes_account_for_every_request():
+    """End-to-end randomized run on the real engine: arrivals with mixed
+    priorities/deadlines under a small pool — `engine.outcomes` must cover
+    every submitted rid exactly once and pool+trie invariants must hold."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine(
+        "qwen3-4b", slots=2, max_len=48, max_new=4, kv_mode="paged",
+        page_size=8, num_pages=11, max_admission_retries=3,
+        admission_backoff=1)
+    rng = np.random.default_rng(17)
+    rids = []
+    for i in range(6):
+        rids.append(engine.submit(
+            rng.integers(0, vocab, int(rng.integers(3, 14))).astype(np.int32),
+            priority=int(rng.integers(0, 3)),
+            deadline=None if i % 3 else 60))
+    res = engine.run()
+    assert sorted(engine.outcomes) == sorted(rids)
+    counts = engine.degradation_stats()
+    assert counts["ok"] + counts["timeout"] + counts["shed"] == len(rids)
+    assert sorted(res) == sorted(rids)
+    assert all(len(res[r]) <= 4 for r in rids)
+    engine.check_kv()
