@@ -95,7 +95,16 @@ def _rows(reps: int, reference: bool):
 
 
 def main(csv=True, reps: int = 5, reference: bool = True):
+    # Cache-tier counters accumulated over this run (hits = warm LRU,
+    # disk_hits = on-disk tier, misses = full searches, evictions = LRU
+    # overflow).  Mirrored into the metrics registry as autotune_cache.*
+    # gauges so --json-out snapshots carry them too.
+    from repro.core.autotune import (_mirror_stats, cache_stats,
+                                     reset_cache_stats)
+    reset_cache_stats()
     rs = rows(reps=reps, reference=reference)
+    _mirror_stats()
+    stats = dict(cache_stats)
     if csv:
         print("name,us_per_call,derived")
         for r in rs:
@@ -106,6 +115,9 @@ def main(csv=True, reps: int = 5, reference: bool = True):
                 print(f"sched_{r['case']}_{mode},{us:.0f},speedup={sp}")
             if ref:
                 print(f"sched_{r['case']}_reference,{ref:.0f},speedup=1.0x")
+        derived = ";".join(f"{k}={stats[k]}" for k in sorted(stats))
+        print(f"sched_cache_stats,0,{derived}")
+    rs.append({"case": "cache_stats", **stats})
     return rs
 
 

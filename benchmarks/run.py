@@ -62,15 +62,31 @@ def main(argv=None) -> None:
     if args.smoke:
         mods.remove(bench_kernels)   # Pallas interpret sweep: minutes on CPU
 
+    # Per-bench metrics: the global registry (repro.obs) accumulates
+    # counters (kernel dispatches, cache tiers, serve outcomes, guard/
+    # checkpoint events) as a side effect of running each bench; the delta
+    # between snapshots attributes them to the module that caused them.
+    from repro.obs import REGISTRY
+
+    def _counters() -> dict:
+        return dict(REGISTRY.snapshot().get("counters", {}))
+
     print("name,us_per_call,derived")
     rows: list[str] = []
+    metrics: dict[str, dict] = {}
     for mod in mods:
         kw = {"smoke": args.smoke}
         if args.smoke and mod is bench_scheduler:
             kw["reps"] = 3
+        before = _counters()
         for line in _collect(mod, **kw):
             rows.append(line)
             print(line)
+        after = _counters()
+        delta = {k: v - before.get(k, 0) for k, v in after.items()
+                 if v != before.get(k, 0)}
+        if delta:
+            metrics[mod.__name__.rsplit(".", 1)[-1]] = delta
         sys.stdout.flush()
 
     if args.json_out:
@@ -84,7 +100,8 @@ def main(argv=None) -> None:
             parsed.append({"name": name, "us_per_call": us_f,
                            "derived": derived})
         with open(args.json_out, "w") as f:
-            json.dump({"smoke": args.smoke, "rows": parsed}, f, indent=1)
+            json.dump({"smoke": args.smoke, "rows": parsed,
+                       "metrics": metrics}, f, indent=1)
         print(f"[run] wrote {len(parsed)} rows to {args.json_out}",
               file=sys.stderr)
 

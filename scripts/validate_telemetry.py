@@ -1,0 +1,77 @@
+"""Validate telemetry artifacts (CI smoke): a Chrome trace JSON and a
+metrics snapshot JSON written by the ``--trace-out``/``--metrics-out``
+launcher flags.
+
+    python scripts/validate_telemetry.py TRACE.json METRICS.json \
+        [--expect-span NAME ...] [--expect-counter PREFIX ...]
+
+Checks that the trace parses as the Chrome trace-event format perfetto
+loads (``traceEvents`` list; every event carries name/ph/ts/pid/tid;
+``X`` events carry ``dur``) and contains the expected span names, and
+that the metrics snapshot parses with non-empty counters/gauges sections
+containing the expected series prefixes.  Exit code 0 = valid.
+"""
+import argparse
+import json
+import sys
+
+
+def check_trace(path: str, expect_spans: list[str]) -> list[str]:
+    with open(path) as f:
+        doc = json.load(f)
+    errs = []
+    evs = doc.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return [f"{path}: traceEvents missing or empty"]
+    for e in evs:
+        for field in ("name", "ph", "ts", "pid", "tid"):
+            if field not in e:
+                errs.append(f"{path}: event missing {field!r}: {e}")
+                break
+        if e.get("ph") == "X" and "dur" not in e:
+            errs.append(f"{path}: X event missing dur: {e}")
+    names = {e["name"] for e in evs if "name" in e}
+    for want in expect_spans:
+        if want not in names:
+            errs.append(f"{path}: expected span/event {want!r}; "
+                        f"have {sorted(names)}")
+    n_spans = sum(1 for e in evs if e.get("ph") == "X")
+    if n_spans == 0:
+        errs.append(f"{path}: no complete ('X') spans recorded")
+    return errs
+
+
+def check_metrics(path: str, expect_counters: list[str]) -> list[str]:
+    with open(path) as f:
+        snap = json.load(f)
+    errs = []
+    for section in ("counters", "gauges", "histograms"):
+        if section not in snap:
+            errs.append(f"{path}: missing section {section!r}")
+    series = list(snap.get("counters", {})) + list(snap.get("gauges", {}))
+    for want in expect_counters:
+        if not any(k.startswith(want) for k in series):
+            errs.append(f"{path}: no series starting with {want!r}")
+    return errs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace")
+    ap.add_argument("metrics")
+    ap.add_argument("--expect-span", action="append", default=[],
+                    metavar="NAME")
+    ap.add_argument("--expect-counter", action="append", default=[],
+                    metavar="PREFIX")
+    args = ap.parse_args()
+    errs = check_trace(args.trace, args.expect_span)
+    errs += check_metrics(args.metrics, args.expect_counter)
+    for e in errs:
+        print(f"[validate_telemetry] FAIL {e}", file=sys.stderr)
+    if errs:
+        raise SystemExit(1)
+    print(f"[validate_telemetry] OK {args.trace} {args.metrics}")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,12 +40,15 @@ import json
 import os
 import shutil
 import threading
+import time
 import zlib
 from itertools import zip_longest
 from typing import Any, Callable
 
 import jax
 import numpy as np
+
+from repro.obs import REGISTRY
 
 FORMAT_VERSION = 2
 
@@ -94,6 +97,7 @@ def save_checkpoint(path: str, step: int, tree: Any, *, host_id: int = 0,
     half-written shard; the shared step dir is created idempotently so
     concurrent hosts cannot clobber each other's shards.
     """
+    t0 = time.monotonic()
     step_dir = _step_dir(path, step)
     os.makedirs(step_dir, exist_ok=True)
     leaves, treedef = jax.tree.flatten(tree)
@@ -120,6 +124,10 @@ def save_checkpoint(path: str, step: int, tree: Any, *, host_id: int = 0,
             "extra": extra or {},
         }
         _write_json_atomic(os.path.join(step_dir, "manifest.json"), manifest)
+    # pushed to the global registry (thread-safe: save_async calls this
+    # from its background writer thread while the train loop records)
+    REGISTRY.counter("checkpoint_ops", op="save")
+    REGISTRY.observe("checkpoint_save_s", time.monotonic() - t0)
     return step_dir
 
 
@@ -143,31 +151,43 @@ def verify_checkpoint(path: str, step: int) -> tuple[bool, str]:
     """Full integrity audit of one step: manifest present, every shard the
     manifest names present, each shard's CRC32 matching its commit marker
     and its leaf count matching the manifest.  Returns (ok, reason)."""
+    t0 = time.monotonic()
     step_dir = _step_dir(path, step)
+
+    def done(ok: bool, why: str) -> tuple[bool, str]:
+        REGISTRY.counter("checkpoint_ops", op="verify")
+        if not ok:
+            REGISTRY.counter("checkpoint_verify_failures")
+        REGISTRY.observe("checkpoint_verify_s", time.monotonic() - t0)
+        return ok, why
+
     try:
         manifest = _read_manifest(step_dir)
     except CheckpointCorruptError as e:
-        return False, str(e)
+        return done(False, str(e))
     for h in range(manifest.get("n_hosts", 1)):
         shard = os.path.join(step_dir, f"shard_{h}.npz")
         marker = os.path.join(step_dir, f"commit_{h}.json")
         if not os.path.isfile(shard):
-            return False, f"shard {h} missing"
+            return done(False, f"shard {h} missing")
         if not os.path.isfile(marker):
-            return False, f"shard {h} never committed"
+            return done(False, f"shard {h} never committed")
         try:
             with open(marker) as f:
                 commit = json.load(f)
         except (OSError, json.JSONDecodeError) as e:
-            return False, f"shard {h} commit marker unreadable: {e}"
+            return done(False, f"shard {h} commit marker unreadable: {e}")
         if commit.get("n_leaves") != manifest["n_leaves"]:
-            return False, (f"shard {h} has {commit.get('n_leaves')} leaves, "
-                           f"manifest says {manifest['n_leaves']}")
+            return done(False,
+                        (f"shard {h} has {commit.get('n_leaves')} leaves, "
+                         f"manifest says {manifest['n_leaves']}"))
         crc = _crc32_file(shard)
         if crc != commit.get("crc32"):
-            return False, (f"shard {h} CRC32 {crc:#010x} != committed "
-                           f"{commit.get('crc32', 0):#010x}")
-    return True, "ok"
+            REGISTRY.counter("checkpoint_crc_failures")
+            return done(False,
+                        (f"shard {h} CRC32 {crc:#010x} != committed "
+                         f"{commit.get('crc32', 0):#010x}"))
+    return done(True, "ok")
 
 
 def _all_steps(path: str) -> list[int]:
@@ -220,6 +240,7 @@ def restore_checkpoint(path: str, step: int, like: Any, *,
     `sharding_fn` (elastic: the target mesh may differ from the one that
     saved).  Raises CheckpointCorruptError on damage (fallback-able) and
     TreeStructureError on a `like` mismatch (not fallback-able)."""
+    t0 = time.monotonic()
     step_dir = _step_dir(path, step)
     if verify:
         ok, why = verify_checkpoint(path, step)
@@ -252,6 +273,8 @@ def restore_checkpoint(path: str, step: int, like: Any, *,
     tree = jax.tree.unflatten(treedef, out)
     if sharding_fn is not None:
         tree = sharding_fn(tree)
+    REGISTRY.counter("checkpoint_ops", op="restore")
+    REGISTRY.observe("checkpoint_restore_s", time.monotonic() - t0)
     return tree
 
 

@@ -105,7 +105,15 @@ def _caps_signature(caps: Mapping[str, int] | None) -> tuple:
 _LRU_MAXSIZE = 4096
 _lru: OrderedDict[tuple, Any] = OrderedDict()
 _lru_lock = threading.Lock()
-cache_stats = {"hits": 0, "misses": 0, "disk_hits": 0}
+cache_stats = {"hits": 0, "misses": 0, "disk_hits": 0, "evictions": 0}
+
+
+def _mirror_stats() -> None:
+    """Mirror the cache counters into the metrics registry as gauges (the
+    8 µs-warm claim's regression surface: bench_scheduler reports them)."""
+    from repro.obs import REGISTRY
+    for k, v in cache_stats.items():
+        REGISTRY.gauge(f"autotune_cache.{k}", v)
 
 
 def _disk_cache_dir() -> str | None:
@@ -123,11 +131,18 @@ def _disk_path(key: tuple) -> str | None:
     return os.path.join(root, f"{key[0]}_{h}.json")
 
 
+def reset_cache_stats() -> None:
+    """Zero the cache counters (tests and delta-based reporting)."""
+    with _lru_lock:
+        cache_stats.update(hits=0, misses=0, disk_hits=0, evictions=0)
+
+
 def clear_cache(*, disk: bool = False) -> None:
-    """Drop every memoized schedule/plan (and the on-disk cache if asked)."""
+    """Drop every memoized schedule/plan (and the on-disk cache if asked).
+    ``cache_stats`` counters survive — they are lifetime telemetry, not
+    cache contents (``reset_cache_stats`` zeroes them)."""
     with _lru_lock:
         _lru.clear()
-        cache_stats.update(hits=0, misses=0, disk_hits=0)
     if disk:
         root = os.environ.get("REPRO_CACHE_DIR",
                               os.path.join(".cache", "repro_scheduler"))
@@ -163,6 +178,7 @@ def _memo(key: tuple, compute: Callable[[], Any],
                 _lru[key] = value
                 while len(_lru) > _LRU_MAXSIZE:
                     _lru.popitem(last=False)
+                    cache_stats["evictions"] += 1
             return value
         except (OSError, ValueError, KeyError, TypeError):
             pass  # corrupt entry: recompute and overwrite
@@ -172,6 +188,7 @@ def _memo(key: tuple, compute: Callable[[], Any],
         _lru[key] = value
         while len(_lru) > _LRU_MAXSIZE:
             _lru.popitem(last=False)
+            cache_stats["evictions"] += 1
     if path is not None:
         try:
             os.makedirs(os.path.dirname(path), exist_ok=True)

@@ -26,6 +26,23 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _record_dispatch(kernel: str, **args) -> None:
+    """Telemetry hook for kernel dispatch decisions (impl chosen, block
+    shapes, pruning ratio).  The wrappers are jitted, so this runs at
+    TRACE time — once per compiled shape, zero steady-state overhead.
+    Counters land in the global registry unconditionally (rare events);
+    the trace instant fires only when telemetry is enabled."""
+    from repro.obs import REGISTRY, get_telemetry
+    REGISTRY.counter("kernel_dispatch", kernel=kernel,
+                     impl=str(args.get("impl", "pallas")))
+    if "pruning_ratio" in args:
+        REGISTRY.gauge("kernel_pruning_ratio", args["pruning_ratio"],
+                       kernel=kernel, sq=args.get("sq"), sk=args.get("sk"))
+    t = get_telemetry()
+    if t.enabled:
+        t.instant("kernel_dispatch", cat="kernel", kernel=kernel, **args)
+
+
 def _pad_to(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
     pads = [(0, t - s) for s, t in zip(x.shape, shape)]
     if all(p == (0, 0) for p in pads):
@@ -48,6 +65,8 @@ def matmul(a: jax.Array, b: jax.Array, *, block_m: int | None = None,
         block_k = block_k or min(bk, 512)
     Mp, Np, Kp = (round_up(M, block_m), round_up(N, block_n),
                   round_up(K, block_k))
+    _record_dispatch("matmul", M=M, N=N, K=K, block_m=block_m,
+                     block_n=block_n, block_k=block_k)
     out = _matmul.matmul_pallas(
         _pad_to(a, (Mp, Kp)), _pad_to(b, (Kp, Np)),
         block_m=block_m, block_n=block_n, block_k=block_k,
@@ -73,6 +92,8 @@ def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1, dilation: int = 1,
     IHp = (OHp - 1) * stride + (KH - 1) * dilation + 1
     xp = _pad_to(x, (N, max(IH, IHp), IW, CI))
     wp = _pad_to(w, (KH, KW, CI, COp))
+    _record_dispatch("conv2d", oh=OH, ow=OW, ci=CI, co=CO,
+                     block_oh=block_oh, block_co=block_co)
     out = _conv2d.conv2d_pallas(xp, wp, stride=stride, dilation=dilation,
                                 block_oh=block_oh, block_co=block_co,
                                 interpret=_interpret())
@@ -122,6 +143,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qf = _pad_to(q, (B, Hq, Sqp, Dh)).reshape(B * Hq, Sqp, Dh)
     kf = _pad_to(k, (B, Hkv, Skp, Dh)).reshape(B * Hkv, Skp, Dh)
     vf = _pad_to(v, (B, Hkv, Skp, Dh)).reshape(B * Hkv, Skp, Dh)
+    real, total = _attention.scheduled_block_counts(
+        Sqp, Skp, block_q=block_q, block_k=block_k, causal=causal,
+        window=window)
+    if not prune:
+        real = total                      # dense grid: nothing skipped
+    _record_dispatch("flash_attention",
+                     impl="train" if trainable else "fwd",
+                     sq=Sq, sk=Sk, block_q=block_q, block_k=block_k,
+                     scheduled_blocks=real, dense_blocks=total,
+                     pruning_ratio=real / total if total else 1.0)
     if trainable:
         spec = _attention.FlashSpec(
             causal=causal, window=window, block_q=block_q, block_k=block_k,
@@ -151,6 +182,7 @@ def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     kf = _pad_to(k_cache, (B, Hkv, Sp, Dh)).reshape(B * Hkv, Sp, Dh)
     vf = _pad_to(v_cache, (B, Hkv, Sp, Dh)).reshape(B * Hkv, Sp, Dh)
     lens = jnp.repeat(lengths, Hkv).astype(jnp.int32)
+    _record_dispatch("flash_decode", batch=B, s=S, block_k=block_k)
     out = _attention.flash_decode_pallas(
         qf, kf, vf, lens, block_k=block_k, interpret=_interpret())
     return out.reshape(B, Hkv, G, Dh).reshape(B, Hq, Dh)
@@ -180,6 +212,10 @@ def paged_flash_decode(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     if k_scale is not None:
         ks = k_scale.transpose(2, 0, 1)       # (Hkv, P, page)
         vs = v_scale.transpose(2, 0, 1)
+    _record_dispatch("paged_flash_decode",
+                     impl="int8" if k_scale is not None else "pallas",
+                     batch=B, pages=P, page_size=page_size,
+                     max_pages=int(page_table.shape[1]))
     out = _paged_attention.paged_flash_decode_pallas(
         qf, kt, vt, pt, lens, ks, vs, page_size=page_size,
         interpret=_interpret())

@@ -60,6 +60,8 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
         with open(path) as f:
             return json.load(f)
 
+    from repro.obs import get_telemetry
+    tel = get_telemetry()
     bundle = get_bundle(arch)
     t0 = time.time()
     result = {"arch": arch, "shape": shape, "mesh": mesh_name}
@@ -77,7 +79,9 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
             chips = mesh.devices.size
             args, shardings, step, donate = step_in_shardings(
                 bundle, shape, mesh)
-            with compat.set_mesh(mesh):
+            with compat.set_mesh(mesh), \
+                    tel.span("compile", cat="dryrun", arch=arch,
+                             shape=shape, mesh=mesh_name):
                 lowered = jax.jit(step, in_shardings=shardings,
                                   donate_argnums=donate).lower(*args)
                 compiled = lowered.compile()
@@ -125,6 +129,11 @@ def run_cell(arch: str, shape: str, mesh_name: str, *, force: bool = False,
                     "peak_gb_per_device": mem["peak_bytes"] / 1e9,
                 },
             )
+            tel.metrics.absorb(
+                {"flops": result["flops"], "hlo_bytes": result["hlo_bytes"],
+                 "collective_bytes": result["collective_bytes"],
+                 "peak_bytes": mem["peak_bytes"]},
+                prefix="dryrun.", arch=arch, shape=shape, mesh=mesh_name)
             print(f"[dryrun] {arch} x {shape} x {mesh_name}: OK "
                   f"({result['compile_s']}s, "
                   f"{result['memory_analysis']['peak_gb_per_device']:.2f} "
@@ -171,7 +180,18 @@ def main() -> None:
                     help="pin the context-parallel attention mode for "
                          "every cell (default: ambient REPRO_RING_ATTN "
                          "policy)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace JSON of per-cell compile "
+                         "spans + kernel dispatch instants")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot (per-cell flops/bytes "
+                         "gauges) as JSON")
     args = ap.parse_args()
+
+    tel = None
+    if args.trace_out or args.metrics_out:
+        import repro.obs as obs
+        tel = obs.enable(process_name="dryrun")
 
     archs = [args.arch] if args.arch else list(ARCH_IDS)
     shapes = [args.shape] if args.shape else list(SHAPES)
@@ -189,6 +209,12 @@ def main() -> None:
                 n_skip += s == "skipped"
                 n_err += s == "error"
     print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if tel is not None:
+        if args.trace_out:
+            print(f"[dryrun] trace -> {tel.write_trace(args.trace_out)}")
+        if args.metrics_out:
+            print(f"[dryrun] metrics -> "
+                  f"{tel.write_metrics(args.metrics_out)}")
     if n_err:
         raise SystemExit(1)
 

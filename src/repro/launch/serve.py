@@ -65,7 +65,7 @@ def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
                  prefill_chunk: int = 32, prefix_cache: bool = True,
                  seed: int = 0, mesh=None,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0, **degrade):
+                 sample_seed: int = 0, telemetry=None, **degrade):
     """(engine, vocab) ready for submit()/run() — shared by the launcher,
     tests and benchmarks so every caller serves through the same stack.
     ``mesh`` (a concrete Mesh) shards the paged pool per
@@ -91,7 +91,7 @@ def build_engine(arch: str, *, smoke: bool = True, slots: int = 4,
                     prefix_cache=prefix_cache,
                     temperature=temperature, top_k=top_k,
                     sample_seed=sample_seed, **degrade),
-        mesh=mesh)
+        mesh=mesh, telemetry=telemetry)
     return engine, bundle.cfg.vocab
 
 
@@ -101,7 +101,8 @@ def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
         page_size: int = 16, num_pages: int | None = None,
         prefix_cache: bool = True, prefix_share: float = 0.0,
         temperature: float = 0.0, top_k: int = 0,
-        stream: bool = False) -> dict:
+        stream: bool = False, trace_out: str | None = None,
+        metrics_out: str | None = None) -> dict:
     """Serve ``n_requests`` random prompts and return {rid: tokens}.
 
     ``prefix_share`` > 0 gives that fraction of the requests a common
@@ -111,11 +112,15 @@ def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
     consumes request 0 through the per-token generator API instead of the
     batch ``run()`` (the other requests still complete — streams drive
     the same continuous-batching ticks)."""
+    tel = None
+    if trace_out or metrics_out:
+        import repro.obs as obs
+        tel = obs.enable(process_name=f"serve:{kv_mode}")
     engine, vocab = build_engine(
         arch, smoke=smoke, slots=slots, max_len=max_len, max_new=max_new,
         kv_mode=kv_mode, page_size=page_size, num_pages=num_pages,
         prefix_cache=prefix_cache, seed=seed, temperature=temperature,
-        top_k=top_k, sample_seed=seed)
+        top_k=top_k, sample_seed=seed, telemetry=tel)
     rng = np.random.default_rng(seed)
     common = rng.integers(0, vocab, size=max(1, prompt_len // 2))
     for i in range(n_requests):
@@ -140,6 +145,14 @@ def run(arch: str, *, smoke: bool = True, n_requests: int = 6,
                  f"matched_tokens={pstats['matched_tokens']} "
                  f"cow={pstats['cow_copies']}")
     print(line)
+    if tel is not None:
+        snap = engine.telemetry()   # pull kv/prefix/traffic into registry
+        if trace_out:
+            print(f"[serve:{kv_mode}] trace -> "
+                  f"{tel.write_trace(trace_out)}")
+        if metrics_out:
+            print(f"[serve:{kv_mode}] metrics -> "
+                  f"{tel.write_metrics(metrics_out, extra={'serve': snap})}")
     return results
 
 
@@ -166,13 +179,21 @@ def main():
                     help="0 = greedy; > 0 samples from softmax(logits/T)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="restrict sampling to the k highest logits")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace JSON (perfetto-loadable) of "
+                         "the serve: admission/prefix-match/prefill/decode "
+                         "spans, request instants")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics snapshot (+ engine.telemetry()) "
+                         "as JSON")
     a = ap.parse_args()
     results = run(a.arch, n_requests=a.requests, slots=a.slots,
                   max_new=a.max_new, kv_mode=a.kv_mode,
                   page_size=a.page_size, num_pages=a.num_pages,
                   prefix_cache=a.prefix_cache, prefix_share=a.prefix_share,
                   stream=a.stream,
-                  temperature=a.temperature, top_k=a.top_k)
+                  temperature=a.temperature, top_k=a.top_k,
+                  trace_out=a.trace_out, metrics_out=a.metrics_out)
     for rid, toks in sorted(results.items()):
         print(f"  req {rid}: {toks}")
 

@@ -44,6 +44,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+import repro.obs as obs
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_bundle
 from repro.data import DataConfig, make_train_iterator
@@ -63,7 +64,8 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         n_hosts: int = 1, hb_timeout_steps: float = 4.0,
         straggler_factor: float = 2.0, straggler_patience: int = 3,
         guard_policy: GuardPolicy | None = None,
-        max_recoveries: int = 8) -> dict:
+        max_recoveries: int = 8, trace_out: str | None = None,
+        metrics_out: str | None = None, telemetry=None) -> dict:
     if chaos is not None and not isinstance(chaos, ChaosInjector):
         chaos = ChaosInjector(chaos, seed=chaos_seed)
     bundle = get_bundle(arch, smoke=smoke)
@@ -120,6 +122,16 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
     host_id, rank, n_data_hosts = 0, 0, n_hosts
     assert global_batch % n_hosts == 0, (global_batch, n_hosts)
     vclock = [0.0]
+    # telemetry traces the recovery state machine ON THE VIRTUAL CLOCK, so
+    # a chaos scenario replays with bit-identical span timestamps (the
+    # determinism test diffs two exported traces); installed globally so
+    # GradGuard/checkpoint/kernel events land in the same registry
+    tel = telemetry
+    if tel is None:
+        if trace_out or metrics_out:
+            tel = obs.enable(clock=lambda: vclock[0], process_name="train")
+        else:
+            tel = obs.get_telemetry()
     monitor = HeartbeatMonitor(
         list(range(n_hosts)),
         StragglerPolicy(heartbeat_timeout_s=hb_timeout_steps,
@@ -155,24 +167,36 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         manager walks past corrupt ones); with nothing restorable, keep
         the current (guarded) state and continue forward."""
         nonlocal params, opt
-        if mgr is None:
-            events.append({"kind": "rollback_unavailable", "step": at_step,
-                           "reason": reason})
-            return at_step
-        mgr.wait()
-        restored = mgr.restore({"params": params, "opt": opt},
-                               sharding_fn=sharding_fn)
-        if restored is None:
-            events.append({"kind": "rollback_unavailable", "step": at_step,
-                           "reason": reason})
-            return at_step
-        rstep, tree = restored
-        params, opt = tree["params"], tree["opt"]
-        events.append({"kind": "restore", "step": at_step,
-                       "restored_step": rstep, "reason": reason})
-        print(f"[train] {reason} at step {at_step}: restored checkpoint "
-              f"step {rstep}")
-        return rstep
+        with tel.span("RESTORE", step=at_step, reason=reason):
+            if mgr is None:
+                events.append({"kind": "rollback_unavailable",
+                               "step": at_step, "reason": reason})
+                return at_step
+            mgr.wait()
+            restored = mgr.restore({"params": params, "opt": opt},
+                                   sharding_fn=sharding_fn)
+            if restored is None:
+                events.append({"kind": "rollback_unavailable",
+                               "step": at_step, "reason": reason})
+                return at_step
+            rstep, tree = restored
+            params, opt = tree["params"], tree["opt"]
+            events.append({"kind": "restore", "step": at_step,
+                           "restored_step": rstep, "reason": reason})
+            print(f"[train] {reason} at step {at_step}: restored checkpoint "
+                  f"step {rstep}")
+            return rstep
+
+    fired_seen = len(chaos.fired) if chaos is not None else 0
+
+    def drain_chaos_instants(at_step: int) -> None:
+        """Mirror newly-fired chaos events into the trace as instants."""
+        nonlocal fired_seen
+        if chaos is None or not tel.enabled:
+            return
+        for ev in chaos.fired[fired_seen:]:
+            tel.instant("chaos", cat="chaos", event=str(ev), step=at_step)
+        fired_seen = len(chaos.fired)
 
     def reopen_data(at_step: int) -> None:
         nonlocal it, extras
@@ -181,6 +205,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                                  n_hosts=n_data_hosts, start_step=at_step)
         extras = make_extras(global_batch // n_data_hosts)
 
+    run_span = tel.begin("RUN", cat="state", step=i) if tel.enabled else None
     try:
         with compat.set_mesh(mesh):
             while i < end_step:
@@ -219,6 +244,9 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                         monitor.heartbeat(h, dt)
                 failed = monitor.check()
                 action = guard.update(loss, finite)
+                drain_chaos_instants(i)
+                if tel.enabled:
+                    tel.metrics.observe("train_step_s", dt)
 
                 history.append(loss)
                 step_log.append(i)
@@ -234,37 +262,58 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                     recoveries += 1
                     if recoveries > max_recoveries:
                         raise RuntimeError("recovery limit exceeded")
-                    survivors = monitor.alive_hosts()
-                    if host_id not in survivors:
-                        raise RuntimeError(f"host {host_id} was evicted")
-                    plan = plan_elastic_remesh(survivors, chips_per_host=1,
-                                               model_parallel=1)
-                    rank = plan.host_ranks[host_id]
-                    n_data_hosts = plan.n_hosts
-                    assert global_batch % n_data_hosts == 0, \
-                        (global_batch, n_data_hosts)
-                    events.append({"kind": "remesh", "step": i,
-                                   "failed": failed,
-                                   "survivors": survivors,
-                                   "plan": dataclasses.asdict(plan)})
-                    print(f"[train] hosts {failed} failed at step {i}; "
-                          f"remesh over {survivors} "
-                          f"(dp={plan.data_parallel})")
+                    tel.finish(run_span, end_step=i, reason="host_failure")
+                    run_span = None
+                    with tel.span("REMESH", cat="state", step=i,
+                                  failed=str(failed)):
+                        survivors = monitor.alive_hosts()
+                        if host_id not in survivors:
+                            raise RuntimeError(
+                                f"host {host_id} was evicted")
+                        plan = plan_elastic_remesh(survivors,
+                                                   chips_per_host=1,
+                                                   model_parallel=1)
+                        rank = plan.host_ranks[host_id]
+                        n_data_hosts = plan.n_hosts
+                        assert global_batch % n_data_hosts == 0, \
+                            (global_batch, n_data_hosts)
+                        events.append({"kind": "remesh", "step": i,
+                                       "failed": failed,
+                                       "survivors": survivors,
+                                       "plan": dataclasses.asdict(plan)})
+                        print(f"[train] hosts {failed} failed at step {i}; "
+                              f"remesh over {survivors} "
+                              f"(dp={plan.data_parallel})")
                     i = restore_or_keep("host failure", i)
                     reopen_data(i)
                     guard.reset()
+                    if tel.enabled:
+                        run_span = tel.begin("RUN", cat="state", step=i)
                     continue
 
                 if action == "rollback":
                     recoveries += 1
                     if recoveries > max_recoveries:
                         raise RuntimeError("recovery limit exceeded")
+                    print(f"[guard] step {i}: rollback "
+                          f"(trigger={guard.last_trigger})")
+                    tel.instant("guard_rollback", cat="guard", step=i,
+                                trigger=guard.last_trigger)
+                    tel.finish(run_span, end_step=i, reason="divergence")
+                    run_span = None
                     i = restore_or_keep("divergence", i)
                     reopen_data(i)
                     guard.reset()
+                    if tel.enabled:
+                        run_span = tel.begin("RUN", cat="state", step=i)
                     continue
 
                 if action == "skip":
+                    print(f"[guard] step {i}: skip "
+                          f"(trigger={guard.last_trigger}, consecutive="
+                          f"{guard.consecutive_skips})")
+                    tel.instant("guard_skip", cat="guard", step=i,
+                                trigger=guard.last_trigger)
                     events.append({"kind": "skip", "step": i})
 
                 if mgr and (i + 1) % ckpt_every == 0:
@@ -280,8 +329,17 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                 mgr.wait()
     finally:
         it.close()
+        drain_chaos_instants(i)
+        tel.finish(run_span, end_step=i)
+        # artifacts land even when a chaos kill unwinds the loop — the
+        # restart inspects the trace of the run that died
+        if trace_out:
+            tel.write_trace(trace_out)
+        if metrics_out:
+            tel.write_metrics(metrics_out)
     return {"losses": history, "steps": step_log, "events": events,
-            "params": params, "opt": opt}
+            "params": params, "opt": opt,
+            "telemetry": tel.snapshot() if tel.enabled else None}
 
 
 def main():
@@ -308,13 +366,19 @@ def main():
                     help="simulated fleet size (peers heartbeat "
                          "synthetically; host 0 is this process)")
     ap.add_argument("--hb-timeout-steps", type=float, default=4.0)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace JSON (perfetto-loadable) "
+                         "of the RUN/REMESH/RESTORE state machine")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics-registry snapshot as JSON")
     a = ap.parse_args()
     out = run(a.arch, smoke=a.smoke, steps=a.steps, seq_len=a.seq_len,
               global_batch=a.global_batch, mesh_kind=a.mesh,
               ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
               microbatches=a.microbatches, lr=a.lr, chaos=a.chaos,
               chaos_seed=a.chaos_seed, n_hosts=a.n_hosts,
-              hb_timeout_steps=a.hb_timeout_steps)
+              hb_timeout_steps=a.hb_timeout_steps,
+              trace_out=a.trace_out, metrics_out=a.metrics_out)
     losses = out["losses"]
     print(f"[train] done: first loss {losses[0]:.4f}, "
           f"last loss {losses[-1]:.4f}, "

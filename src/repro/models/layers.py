@@ -523,6 +523,10 @@ def paged_decode_attention(q, k_pages, v_pages, page_table, lengths,
         # decode q is one token; the flash policy's min-seq threshold is a
         # prefill knob, so auto here is purely a backend question
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    from repro.kernels.ops import _record_dispatch
+    _record_dispatch("paged_decode_attention",
+                     impl=impl if (impl == "pallas" and T == 1) else "xla",
+                     t=T, page_size=page, pages=P)
     if impl == "pallas" and T == 1:
         from repro.kernels import ops as kops
         o = kops.paged_flash_decode(q[:, 0], k_pages, v_pages, page_table,

@@ -59,11 +59,33 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import get_telemetry
+
 from .kv import BlockPoolKV, PagedKVConfig
 from .prefix import RadixPrefixCache
 from .scheduler import Phase, PhaseScheduler, Request, SchedulerConfig
 
 KV_MODES = ("dense", "paged", "paged_int8")
+
+
+class _TracedPrefix:
+    """Engine-side proxy around the radix prefix cache: times ``match``
+    as a ``prefix_match`` span (with hit/matched-token args) without the
+    jax-free scheduler/prefix modules ever importing telemetry.  Every
+    other attribute forwards to the wrapped cache."""
+
+    def __init__(self, prefix: RadixPrefixCache, obs):
+        self._prefix = prefix
+        self._obs = obs
+
+    def match(self, tokens):
+        h = self._obs.begin("prefix_match", tokens=int(len(tokens)))
+        m = self._prefix.match(tokens)
+        self._obs.finish(h, matched=int(m.matched), hit=bool(m.hit))
+        return m
+
+    def __getattr__(self, name):
+        return getattr(self._prefix, name)
 
 
 @dataclasses.dataclass
@@ -143,13 +165,16 @@ class ServingEngine:
     STALL_LIMIT = 4096
 
     def __init__(self, bundle: Any, params: Any, cfg: ServeConfig,
-                 mesh: Any = None):
+                 mesh: Any = None, telemetry: Any = None):
         if cfg.kv_mode not in KV_MODES:
             raise ValueError(f"kv_mode {cfg.kv_mode!r} not in {KV_MODES}")
         self.bundle = bundle
         self.params = params
         self.cfg = cfg
         self.mesh = mesh               # concrete Mesh: shard the page pool
+        # telemetry: explicit Telemetry, or the process global (disabled
+        # unless a launcher/bench called ``obs.enable()``)
+        self.obs = telemetry if telemetry is not None else get_telemetry()
         self.results: dict[int, list[int]] = {}
         self.outcomes: dict[int, str] = {}   # rid -> ok | timeout | shed
         self._next_id = 0
@@ -309,6 +334,8 @@ class ServingEngine:
         self.queue: list[tuple[int, np.ndarray, int, int | None]] = []
         self._dense_tick = 0
         self._dense_cache = None
+        self._traffic = {"gb_read_tokens": 0, "dram_read_tokens": 0,
+                         "written_tokens": 0}
         self._decode = jax.jit(self.bundle.decode_step)
         self._cache_axes: dict | None = None
         self._prefill_template = None       # built lazily, reused forever
@@ -345,15 +372,16 @@ class ServingEngine:
                     1, self.cfg.max_len)
             toks = jnp.asarray(prompt, jnp.int32)[None]
             S = toks.shape[1]
-            if self._bucketed:
-                Sb = self._prompt_bucket(S)
-                toks = jnp.pad(toks, ((0, 0), (0, Sb - S)))
-                logits, c1 = self._prefill(
-                    self.params, toks, self._prefill_template,
-                    jnp.asarray([S], jnp.int32))
-            else:
-                logits, c1 = self._prefill(self.params, toks,
-                                           self._prefill_template)
+            with self.obs.span("prefill", rid=rid, tokens=int(S)):
+                if self._bucketed:
+                    Sb = self._prompt_bucket(S)
+                    toks = jnp.pad(toks, ((0, 0), (0, Sb - S)))
+                    logits, c1 = self._prefill(
+                        self.params, toks, self._prefill_template,
+                        jnp.asarray([S], jnp.int32))
+                else:
+                    logits, c1 = self._prefill(self.params, toks,
+                                               self._prefill_template)
             nxt = self._pick(logits[0, -1])
             cache = self._write_slot(cache, c1, slot_idx)
             s = self.slots[slot_idx]
@@ -411,21 +439,24 @@ class ServingEngine:
         if self._dense_cache is None:
             self._dense_cache = self.bundle.init_cache(cfg.batch, cfg.max_len)
         self._dense_tick += 1
+        obs = self.obs
         self._expire_dense()
-        self._dense_cache = self._admit(self._dense_cache)
+        with obs.span("admission", tick=self._dense_tick):
+            self._dense_cache = self._admit(self._dense_cache)
         if not any(s.request_id is not None for s in self.slots):
             return
-        # one decode tick for the whole pool
-        last = np.zeros((cfg.batch, 1), np.int32)
-        for i, s in enumerate(self.slots):
-            if s.request_id is not None:
-                last[i, 0] = s.generated[-1]
-        logits, self._dense_cache = self._decode(
-            self.params, jnp.asarray(last), self._dense_cache)
-        # greedy: batch argmax on device, ints cross to host; sampled:
-        # one host copy of the active rows feeds the seeded picker
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)) \
-            if self._greedy else np.asarray(logits[:, 0])
+        with obs.span("decode", tick=self._dense_tick):
+            # one decode tick for the whole pool
+            last = np.zeros((cfg.batch, 1), np.int32)
+            for i, s in enumerate(self.slots):
+                if s.request_id is not None:
+                    last[i, 0] = s.generated[-1]
+            logits, self._dense_cache = self._decode(
+                self.params, jnp.asarray(last), self._dense_cache)
+            # greedy: batch argmax on device, ints cross to host; sampled:
+            # one host copy of the active rows feeds the seeded picker
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1)) \
+                if self._greedy else np.asarray(logits[:, 0])
         for i, s in enumerate(self.slots):
             if s.request_id is None:
                 continue
@@ -435,6 +466,9 @@ class ServingEngine:
             if s.remaining <= 0 or tok == cfg.eos_id:
                 self.results[s.request_id] = s.generated
                 self.outcomes[s.request_id] = "ok"
+                obs.counter("serve_requests", outcome="ok")
+                obs.instant("complete", rid=s.request_id,
+                            generated=len(s.generated))
                 self.slots[i] = _Slot()
 
     # ------------------------------------------------------------------
@@ -490,6 +524,13 @@ class ServingEngine:
         self._requests: dict[int, Request] = {}
         self.cow_copies = 0
         self.ticks = 0
+        # live KV traffic: token-exact attended context (the paper's
+        # global-buffer level) and page-granular pool reads (DRAM level),
+        # accumulated in _exec_rows.  Plain int adds — always on; the
+        # roofline accountant compares them against the closed-form
+        # prediction (obs.roofline_live.predict_paged_decode_traffic).
+        self._traffic = {"gb_read_tokens": 0, "dram_read_tokens": 0,
+                         "written_tokens": 0}
 
     def _pages_view(self, max_tokens: int) -> int:
         """Power-of-two page-table slice covering ``max_tokens`` — the
@@ -551,6 +592,9 @@ class ServingEngine:
             self.prefix.insert(seq, self.kv.slot_pages(req.slot), n_cached)
         self.results[req.rid] = req.output
         self.outcomes[req.rid] = "ok"
+        self.obs.counter("serve_requests", outcome="ok")
+        self.obs.instant("complete", rid=req.rid,
+                         generated=req.n_generated)
         self.sched.finish(self.kv, req)
 
     def _degrade_tick(self) -> None:
@@ -561,6 +605,8 @@ class ServingEngine:
         for req in self.sched.expire_deadlines(self.kv, self.ticks):
             self.results[req.rid] = req.output
             self.outcomes[req.rid] = "timeout"
+            self.obs.counter("serve_requests", outcome="timeout")
+            self.obs.instant("timeout", rid=req.rid)
         if cfg.shed_patience > 0:
             st = self.kv.stats()
             frac = st["pages_used"] / max(1, st["pages_total"] - 1)
@@ -586,21 +632,37 @@ class ServingEngine:
         if not self.sched.has_work:
             return
         self.ticks += 1
+        obs = self.obs
         self._degrade_tick()
-        admitted = self.sched.admit(self.kv, now=self.ticks,
-                                    prefix=self.prefix)
-        for req in admitted:
-            if req.cow is not None:
-                self._exec_cow(req)
+        with obs.span("admission", tick=self.ticks):
+            prefix = self.prefix
+            if obs.enabled and prefix is not None:
+                prefix = _TracedPrefix(prefix, obs)
+            admitted = self.sched.admit(self.kv, now=self.ticks,
+                                        prefix=prefix)
+            for req in admitted:
+                if obs.enabled:
+                    obs.instant("admit", rid=req.rid,
+                                prompt=int(len(req.prompt)),
+                                matched=int(req.matched_tokens))
+                if req.cow is not None:
+                    self._exec_cow(req)
         shed = self.sched.drain_shed()
         for req in shed:
             self.results[req.rid] = req.output
             self.outcomes[req.rid] = "shed"
+            obs.counter("serve_requests", outcome="shed")
+            obs.instant("shed", rid=req.rid)
 
         # decode rows claim their next page BEFORE the batch is built —
         # under page pressure this may evict actives (prefill included),
         # so jobs are selected afterwards
-        self.sched.ensure_decode_pages(self.kv)
+        with obs.span("reclaim", tick=self.ticks):
+            preempted = self.sched.ensure_decode_pages(self.kv)
+        for req in preempted or ():
+            obs.counter("serve_preemptions")
+            obs.instant("preempt", rid=req.rid,
+                        preemptions=req.preemptions)
         jobs = self.sched.prefill_jobs()
         decoding = self.sched.decoding()
         if not jobs and not decoding:
@@ -623,7 +685,10 @@ class ServingEngine:
             groups = [(jobs, []), ([], decoding)]
         for g_jobs, g_decode in groups:
             if g_jobs or g_decode:
-                self._exec_rows(g_jobs, g_decode)
+                with obs.span("prefill" if g_jobs else "decode",
+                              tick=self.ticks, prefill_rows=len(g_jobs),
+                              decode_rows=len(g_decode)):
+                    self._exec_rows(g_jobs, g_decode)
 
     def _exec_rows(self, jobs, decoding) -> None:
         """Build one padded (B, T) batch from the given prefill jobs +
@@ -649,6 +714,7 @@ class ServingEngine:
             else np.asarray(rows_dev)
 
         by_slot = {j.req.slot: j for j in jobs}
+        tr, page = self._traffic, self.kv.cfg.page_size
         for slot in range(B):
             if counts[slot] == 0:
                 continue
@@ -656,12 +722,20 @@ class ServingEngine:
             if job is not None:                      # prefill chunk
                 req = job.req
                 self.kv.advance(slot, job.count)
+                ctx = int(self.kv.lengths[slot])     # attended context
+                tr["gb_read_tokens"] += ctx
+                tr["dram_read_tokens"] += self.kv.pages_for(ctx) * page
+                tr["written_tokens"] += job.count
                 self.sched.finish_prefill_chunk(req, job.count)
                 if req.phase is not Phase.DECODE:
                     continue                         # more chunks to go
             else:                                    # decode row
                 req = next(r for r in decoding if r.slot == slot)
                 self.kv.advance(slot, 1)
+                ctx = int(self.kv.lengths[slot])
+                tr["gb_read_tokens"] += ctx
+                tr["dram_read_tokens"] += self.kv.pages_for(ctx) * page
+                tr["written_tokens"] += 1
             tok = int(picked[slot]) if self._greedy \
                 else self._pick(picked[slot])
             req.generated.append(tok)
@@ -696,6 +770,43 @@ class ServingEngine:
             self.prefix.check_invariants()
         else:
             self.kv.check_invariants()
+
+    def traffic_stats(self) -> dict:
+        """Observed KV traffic (tokens + bytes) at the paper's two fetch
+        levels: ``gb_*`` is token-exact attended context (global-buffer
+        level), ``dram_*`` is page-granular pool reads.  Paged modes
+        only; dense reports zeros (its cache is a flat reservation)."""
+        tr = dict(self._traffic)
+        if self.cfg.kv_mode != "dense":
+            bpt = self.kv.cfg.page_bytes / self.kv.cfg.page_size
+        else:
+            bpt = 0.0
+        tr["gb_read_bytes"] = tr["gb_read_tokens"] * bpt
+        tr["dram_read_bytes"] = tr["dram_read_tokens"] * bpt
+        tr["written_bytes"] = tr["written_tokens"] * bpt
+        return tr
+
+    def telemetry(self) -> dict:
+        """One structured snapshot of everything the engine knows —
+        request outcomes, KV-pool utilization, prefix-cache hit rate,
+        observed traffic — mirrored into the metrics registry as
+        ``serve.*`` gauges (the pull half of the obs design) and returned
+        as a plain dict (the ``/stats`` surface)."""
+        snap = {
+            "mode": self.cfg.kv_mode,
+            "ticks": getattr(self, "ticks", None) if
+            self.cfg.kv_mode != "dense" else self._dense_tick,
+            "outcomes": self.degradation_stats(),
+            "kv": self.kv_stats(),
+            "prefix": self.prefix_stats(),
+            "traffic": self.traffic_stats(),
+        }
+        m = self.obs.metrics
+        m.absorb(snap["outcomes"], prefix="serve.outcomes.")
+        m.absorb(snap["kv"], prefix="serve.kv.")
+        m.absorb(snap["prefix"], prefix="serve.prefix.")
+        m.absorb(snap["traffic"], prefix="serve.traffic.")
+        return snap
 
     def kv_stats(self) -> dict:
         """Resident-KV accounting (benchmarks): paged modes report pool

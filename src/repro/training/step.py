@@ -154,13 +154,24 @@ class GradGuard:
         self.steps = 0
         self.consecutive_skips = 0
         self.consecutive_spikes = 0
+        # what caused the most recent skip/rollback — the train loop logs
+        # it with the step index and it labels the gradguard_events
+        # counters in the metrics registry
+        self.last_trigger: str | None = None
 
     def update(self, loss: float, finite: bool) -> str:
+        from repro.obs import REGISTRY
         p = self.policy
         if not finite or not math.isfinite(loss):
             self.consecutive_skips += 1
             if self.consecutive_skips > p.max_consecutive_skips:
+                self.last_trigger = "skip_budget"
+                REGISTRY.counter("gradguard_events", kind="rollback",
+                                 trigger="skip_budget")
                 return "rollback"
+            self.last_trigger = "nonfinite"
+            REGISTRY.counter("gradguard_events", kind="skip",
+                             trigger="nonfinite")
             return "skip"
         self.consecutive_skips = 0
         self.steps += 1
@@ -172,6 +183,9 @@ class GradGuard:
             # normalize the divergence it is trying to detect)
             self.consecutive_spikes += 1
             if self.consecutive_spikes >= p.spike_patience:
+                self.last_trigger = "loss_spike"
+                REGISTRY.counter("gradguard_events", kind="rollback",
+                                 trigger="loss_spike")
                 return "rollback"
             return "ok"
         self.consecutive_spikes = 0
