@@ -13,6 +13,14 @@ one CSV row per scenario:
     interval; ``fallback_steps`` is the extra work discarded.
   * ``ckpt_verify``      — the steady-state cost of the CRC audit per
     checkpoint (the tax every restart pays per step dir it inspects).
+  * ``recover_kill_proc`` — REAL processes: a 2-worker supervised fleet
+    loses one rank to a chaos kill (exit 43); the latency reported is
+    failure detection -> backoff -> relaunch, derived from the
+    supervisor's own event timestamps.
+  * ``restore_striped``  — a 2-worker gang restores the same checkpoint
+    with byte-striped reads (each host reads half the shard, the fleet
+    exchanges stripes); reports bytes read per host vs the full-read
+    baseline, from each worker's metrics counters.
 
 Baseline column ``us_per_call`` is microseconds per recovery (or per
 verify).  Run directly:
@@ -21,6 +29,8 @@ verify).  Run directly:
 import argparse
 import contextlib
 import io
+import json
+import os
 import shutil
 import tempfile
 import time
@@ -102,6 +112,69 @@ def _bench_verify(steps, ckpt_every, reps=20):
         shutil.rmtree(work, ignore_errors=True)
 
 
+def _run_fleet(fleet_dir, ckpt_dir, *, steps, ckpt_every, nprocs=2,
+               chaos=(), striped="never"):
+    """Drive a real supervised fleet (subprocess workers) and return the
+    supervisor's report."""
+    from repro.launch.supervisor import make_cmd_builder
+    from repro.runtime.supervisor import RestartPolicy, Supervisor
+    ns = argparse.Namespace(arch=ARCH, steps=steps, seq_len=32,
+                            global_batch=4, ckpt_every=ckpt_every,
+                            ckpt_dir=ckpt_dir, smoke=True, chaos_seed=0,
+                            distributed="none")
+    policy = RestartPolicy(backoff_base_s=0.05, backoff_max_s=0.2)
+    sup = Supervisor(nprocs,
+                     make_cmd_builder(ns, fleet_dir, list(chaos), None),
+                     fleet_dir=fleet_dir, policy=policy,
+                     chaos_specs=list(chaos), ckpt_dir=ckpt_dir,
+                     striped_restore=striped)
+    return _quiet(sup.run)
+
+
+def _bench_kill_proc(steps, ckpt_every):
+    """Detection->relaunch latency of a real chaos-killed worker, from the
+    supervisor's event log (worker_failed rc=43 -> its attempt-2 launch)."""
+    work = tempfile.mkdtemp(prefix="bench_fault_killproc_")
+    try:
+        ckpt = os.path.join(work, "ckpt")
+        report = _run_fleet(os.path.join(work, "fleet"), ckpt,
+                            steps=steps, ckpt_every=ckpt_every,
+                            chaos=[f"kill@{steps - 3}"])
+        failed = next(e for e in report["events"]
+                      if e["kind"] == "worker_failed" and e["rc"] == 43)
+        relaunch = next(e for e in report["events"]
+                        if e["kind"] == "launch" and e["attempt"] == 2
+                        and e["tag"] == failed["tag"])
+        return (relaunch["t"] - failed["t"], report["outcome"],
+                report["wall_s"])
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+def _bench_restore_striped(steps, ckpt_every):
+    """Bytes/host of a striped gang restore vs the full shard, from the
+    workers' own metrics counters.  Returns (restore_s, striped_bytes,
+    full_bytes)."""
+    work = tempfile.mkdtemp(prefix="bench_fault_striped_")
+    try:
+        ckpt = os.path.join(work, "ckpt")
+        _run_fleet(os.path.join(work, "seed"), ckpt,
+                   steps=steps, ckpt_every=ckpt_every)    # commit a ckpt
+        fleet = os.path.join(work, "fleet")
+        _run_fleet(fleet, ckpt, steps=steps + ckpt_every,
+                   ckpt_every=ckpt_every, striped="always")
+        with open(os.path.join(fleet, "metrics_rank0.json")) as f:
+            m = json.load(f)
+        striped = m["counters"]["checkpoint_read_bytes{mode=striped}"]
+        restore_s = m["histograms"]["checkpoint_restore_s"]["mean"]
+        from repro.checkpoint import verified_steps
+        step = verified_steps(ckpt)[0]
+        shard = os.path.join(ckpt, f"step_{step:08d}", "shard_0.npz")
+        return restore_s, int(striped), os.path.getsize(shard)
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
 def main(csv=True, smoke: bool = False):
     steps, ckpt_every = (8, 4) if smoke else (20, 5)
     rows = []
@@ -114,6 +187,15 @@ def main(csv=True, smoke: bool = False):
     per_audit, n = _bench_verify(steps, ckpt_every)
     rows.append(("ckpt_verify", per_audit * 1e6,
                  f"audit_ms={per_audit * 1e3:.2f};n_ckpts={n}"))
+    dt, outcome, wall = _bench_kill_proc(steps, ckpt_every)
+    rows.append(("recover_kill_proc", dt * 1e6,
+                 f"restart_s={dt:.2f};outcome={outcome};"
+                 f"fleet_wall_s={wall:.1f}"))
+    dt, striped_b, full_b = _bench_restore_striped(steps, ckpt_every)
+    rows.append(("restore_striped", dt * 1e6,
+                 f"restore_s={dt:.2f};bytes_per_host={striped_b};"
+                 f"full_bytes={full_b};"
+                 f"saved_pct={100 * (1 - striped_b / full_b):.0f}"))
     if csv:
         for name, us, derived in rows:
             print(f"{name},{us:.0f},{derived}")

@@ -1,8 +1,9 @@
 from .manager import (CheckpointCorruptError, CheckpointError,
                       CheckpointManager, TreeStructureError, latest_step,
-                      restore_checkpoint, save_checkpoint, verified_steps,
-                      verify_checkpoint)
+                      restore_checkpoint, restore_checkpoint_striped,
+                      save_checkpoint, verified_steps, verify_checkpoint)
 
 __all__ = ["CheckpointCorruptError", "CheckpointError", "CheckpointManager",
            "TreeStructureError", "latest_step", "restore_checkpoint",
-           "save_checkpoint", "verified_steps", "verify_checkpoint"]
+           "restore_checkpoint_striped", "save_checkpoint", "verified_steps",
+           "verify_checkpoint"]

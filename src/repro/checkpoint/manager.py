@@ -25,8 +25,22 @@ in this single-process container callers just save host 0 last.)
 Saves run on a background thread (async): the train loop hands over
 host-local numpy copies and keeps stepping.  Restore re-shards to
 whatever mesh is available (elastic): arrays are loaded full and re-placed
-by ``sharding_fn`` (at 1000-node scale, substitute a striped read; the
-interface is unchanged).
+by ``sharding_fn``.
+
+Striped multi-host restore (:func:`restore_checkpoint_striped`): when a
+whole fleet restores the same shard (gang cold-start / post-re-mesh
+restart), every host reading the full file is N redundant passes over
+the same bytes.  Instead host r of R reads only byte stripe
+``[r*S/R, (r+1)*S/R)`` of the shard file, the fleet all-gathers the
+stripes over the host mesh (``repro.runtime.fleet`` transports), each
+host CRC-checks the *assembled* bytes against the commit marker and
+``np.load``s from memory.  Disk bytes per host drop from S to S/R (the
+``checkpoint_read_bytes{mode=...}`` counters in the obs registry price
+it); integrity guarantees are unchanged because the CRC covers the
+reassembled whole.  A stripe-exchange timeout raises
+``TimeoutError`` (NOT ``CheckpointCorruptError``) — the bytes on disk
+may be fine, so the caller must retry or fall back to full reads rather
+than walk to an older step.
 
 Error contract: :class:`CheckpointCorruptError` means "this step is
 damaged, try an older one" (the manager's fallback does exactly that);
@@ -36,6 +50,7 @@ error names the first diverging leaf path.
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
@@ -51,6 +66,15 @@ import numpy as np
 from repro.obs import REGISTRY
 
 FORMAT_VERSION = 2
+
+
+def _count_read(n: int, mode: str) -> None:
+    """Attribute ``n`` bytes of checkpoint-dir disk reads to ``mode``
+    (``full`` = whole-file verify/load, ``striped`` = stripe reads +
+    manifest/marker metadata).  The fleet drills assert striped restore
+    reads strictly fewer bytes per host than a full read."""
+    if n:
+        REGISTRY.counter("checkpoint_read_bytes", n, mode=mode)
 
 
 class CheckpointError(Exception):
@@ -181,7 +205,13 @@ def verify_checkpoint(path: str, step: int) -> tuple[bool, str]:
             return done(False,
                         (f"shard {h} has {commit.get('n_leaves')} leaves, "
                          f"manifest says {manifest['n_leaves']}"))
-        crc = _crc32_file(shard)
+        try:
+            crc = _crc32_file(shard)
+            _count_read(os.path.getsize(shard), "full")
+        except OSError as e:
+            # a concurrent writer's GC can reap the step mid-audit; that
+            # is "fall back", not a crash
+            return done(False, f"shard {h} vanished mid-audit: {e}")
         if crc != commit.get("crc32"):
             REGISTRY.counter("checkpoint_crc_failures")
             return done(False,
@@ -232,30 +262,13 @@ def _check_structure(step: int, manifest: dict, like: Any) -> Any:
         f"vs {str(treedef)!r}")
 
 
-def restore_checkpoint(path: str, step: int, like: Any, *,
-                       host_id: int = 0,
-                       sharding_fn: Callable[[Any], Any] | None = None,
-                       verify: bool = True) -> Any:
-    """Verified restore into the structure of `like`; re-shard with
-    `sharding_fn` (elastic: the target mesh may differ from the one that
-    saved).  Raises CheckpointCorruptError on damage (fallback-able) and
-    TreeStructureError on a `like` mismatch (not fallback-able)."""
-    t0 = time.monotonic()
-    step_dir = _step_dir(path, step)
-    if verify:
-        ok, why = verify_checkpoint(path, step)
-        if not ok:
-            raise CheckpointCorruptError(f"step {step}: {why}")
-    manifest = _read_manifest(step_dir)
-    leaves = jax.tree.leaves(like)
-    treedef = _check_structure(step, manifest, like)
-    try:
-        data = np.load(os.path.join(step_dir, f"shard_{host_id}.npz"))
-    except Exception as e:  # zipfile/zlib raise various types on damage
-        raise CheckpointCorruptError(f"step {step}: shard {host_id} "
-                                     f"unreadable: {e}")
+def _audited_tree(step: int, manifest: dict, like: Any, treedef: Any,
+                  data, sharding_fn: Callable[[Any], Any] | None) -> Any:
+    """Shared tail of the full and striped restores: audit every loaded
+    leaf against the manifest (corruption) and the `like` target (caller
+    bug), unflatten, re-shard."""
     out = []
-    for i, leaf in enumerate(leaves):
+    for i, leaf in enumerate(jax.tree.leaves(like)):
         arr = data[f"leaf_{i}"]
         if list(arr.shape) != manifest["shapes"][i] or \
                 str(arr.dtype) != manifest["dtypes"][i]:
@@ -273,7 +286,93 @@ def restore_checkpoint(path: str, step: int, like: Any, *,
     tree = jax.tree.unflatten(treedef, out)
     if sharding_fn is not None:
         tree = sharding_fn(tree)
+    return tree
+
+
+def restore_checkpoint(path: str, step: int, like: Any, *,
+                       host_id: int = 0,
+                       sharding_fn: Callable[[Any], Any] | None = None,
+                       verify: bool = True) -> Any:
+    """Verified restore into the structure of `like`; re-shard with
+    `sharding_fn` (elastic: the target mesh may differ from the one that
+    saved).  Raises CheckpointCorruptError on damage (fallback-able) and
+    TreeStructureError on a `like` mismatch (not fallback-able)."""
+    t0 = time.monotonic()
+    step_dir = _step_dir(path, step)
+    if verify:
+        ok, why = verify_checkpoint(path, step)
+        if not ok:
+            raise CheckpointCorruptError(f"step {step}: {why}")
+    manifest = _read_manifest(step_dir)
+    treedef = _check_structure(step, manifest, like)
+    shard = os.path.join(step_dir, f"shard_{host_id}.npz")
+    try:
+        data = np.load(shard)
+        _count_read(os.path.getsize(shard), "full")
+    except Exception as e:  # zipfile/zlib raise various types on damage
+        raise CheckpointCorruptError(f"step {step}: shard {host_id} "
+                                     f"unreadable: {e}")
+    tree = _audited_tree(step, manifest, like, treedef, data, sharding_fn)
     REGISTRY.counter("checkpoint_ops", op="restore")
+    REGISTRY.observe("checkpoint_restore_s", time.monotonic() - t0)
+    return tree
+
+
+def restore_checkpoint_striped(path: str, step: int, like: Any, *,
+                               rank: int, world: int, exchange,
+                               host_id: int = 0,
+                               sharding_fn: Callable[[Any], Any] | None
+                               = None) -> Any:
+    """Collective verified restore: ``world`` hosts each read 1/world of
+    the shard's bytes and all-gather the stripes over ``exchange`` (see
+    module docstring).  Every participating host must call this with the
+    same (step, host_id) or the all-gather times out.
+
+    Integrity: the CRC32 of the *assembled* bytes is checked against the
+    shard's commit marker on every host — equivalent to the full-read
+    ``verify_checkpoint`` audit for this shard, without re-reading it.
+    """
+    t0 = time.monotonic()
+    step_dir = _step_dir(path, step)
+    manifest = _read_manifest(step_dir)
+    treedef = _check_structure(step, manifest, like)
+    shard = os.path.join(step_dir, f"shard_{host_id}.npz")
+    marker = os.path.join(step_dir, f"commit_{host_id}.json")
+    try:
+        with open(marker) as f:
+            commit = json.load(f)
+        size = os.path.getsize(shard)
+        lo = rank * size // world
+        hi = (rank + 1) * size // world
+        with open(shard, "rb") as f:
+            f.seek(lo)
+            stripe = f.read(hi - lo)
+        _count_read(len(stripe) + os.path.getsize(marker), "striped")
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"step {step}: shard {host_id} unreadable for striping: {e}")
+    parts = exchange.allgather(f"ckpt:{step}:{host_id}:{size}", rank,
+                               world, stripe)
+    peer_bytes = sum(len(p) for i, p in enumerate(parts) if i != rank)
+    if peer_bytes:
+        REGISTRY.counter("checkpoint_stripe_bytes", peer_bytes, dir="recv")
+        REGISTRY.counter("checkpoint_stripe_bytes",
+                         len(stripe) * (world - 1), dir="sent")
+    blob = b"".join(parts)
+    crc = zlib.crc32(blob)
+    if len(blob) != size or crc != commit.get("crc32"):
+        REGISTRY.counter("checkpoint_crc_failures")
+        raise CheckpointCorruptError(
+            f"step {step}: assembled shard {host_id} CRC32 {crc:#010x} "
+            f"({len(blob)} B) != committed {commit.get('crc32', 0):#010x} "
+            f"({size} B)")
+    try:
+        data = np.load(io.BytesIO(blob))
+    except Exception as e:
+        raise CheckpointCorruptError(f"step {step}: assembled shard "
+                                     f"{host_id} unreadable: {e}")
+    tree = _audited_tree(step, manifest, like, treedef, data, sharding_fn)
+    REGISTRY.counter("checkpoint_ops", op="restore_striped")
     REGISTRY.observe("checkpoint_restore_s", time.monotonic() - t0)
     return tree
 
@@ -283,11 +382,16 @@ class CheckpointManager:
     verified-restore fallback."""
 
     def __init__(self, path: str, *, keep: int = 3, host_id: int = 0,
-                 n_hosts: int = 1):
+                 n_hosts: int = 1,
+                 fault_hook: Callable[[int], None] | None = None):
         self.path = path
         self.keep = keep
         self.host_id = host_id
         self.n_hosts = n_hosts
+        # fault injection seam (chaos `diskfull@N`): called with the step
+        # on the writer thread BEFORE any bytes land; an exception it
+        # raises surfaces at the next wait() like a real failed write
+        self.fault_hook = fault_hook
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
         os.makedirs(path, exist_ok=True)
@@ -300,6 +404,8 @@ class CheckpointManager:
 
         def work():
             try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
                 save_checkpoint(self.path, step, host_tree,
                                 host_id=self.host_id, n_hosts=self.n_hosts,
                                 extra=extra)
@@ -326,23 +432,38 @@ class CheckpointManager:
         return latest_step(self.path)
 
     def restore(self, like: Any, step: int | None = None,
-                sharding_fn=None) -> tuple[int, Any] | None:
+                sharding_fn=None,
+                stripe: tuple[int, int, Any] | None = None
+                ) -> tuple[int, Any] | None:
         """Restore `step` (default: newest), falling back through older
         checkpoints when the newer ones fail verification.  Returns
         (step, tree) or None when nothing intact exists.  A tree-structure
         mismatch raises immediately — older checkpoints would mismatch the
         same way, and silently restoring the wrong structure is the one
-        failure this module exists to prevent."""
+        failure this module exists to prevent.
+
+        ``stripe=(rank, world, exchange)`` switches to the collective
+        striped restore — only valid when every fleet member calls with
+        the same view of the checkpoint dir (shared filesystem), so all
+        ranks walk the same step sequence in lockstep; an exchange
+        timeout (a ``TimeoutError``) propagates rather than triggering
+        fallback, because peers may still be alive on the newer step."""
+        def load(s: int) -> Any:
+            if stripe is not None:
+                rank, world, exchange = stripe
+                return restore_checkpoint_striped(
+                    self.path, s, like, rank=rank, world=world,
+                    exchange=exchange, host_id=self.host_id,
+                    sharding_fn=sharding_fn)
+            return restore_checkpoint(self.path, s, like,
+                                      host_id=self.host_id,
+                                      sharding_fn=sharding_fn)
+
         if step is not None:
-            return step, restore_checkpoint(self.path, step, like,
-                                            host_id=self.host_id,
-                                            sharding_fn=sharding_fn)
+            return step, load(step)
         for s in reversed(_all_steps(self.path)):
             try:
-                tree = restore_checkpoint(self.path, s, like,
-                                          host_id=self.host_id,
-                                          sharding_fn=sharding_fn)
-                return s, tree
+                return s, load(s)
             except CheckpointCorruptError as e:
                 print(f"[ckpt] step {s} failed verification ({e}); "
                       f"falling back")

@@ -14,3 +14,17 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh():
     """1-device mesh with the production axis names (CPU tests/benches)."""
     return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def make_worker_mesh():
+    """1-device mesh over THIS process's first local device.
+
+    A fleet worker must not use ``make_local_mesh``: once
+    ``jax.distributed.initialize`` has run, ``jax.devices()`` is global
+    and a (1, 1) device mesh would place every rank's compute on process
+    0's device.  Built from ``jax.local_devices()`` the mesh stays on the
+    rank's own device whether or not the coordinator is up."""
+    import jax
+    import numpy as np
+    dev = np.asarray(jax.local_devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(dev, ("data", "model"))

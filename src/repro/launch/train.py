@@ -33,6 +33,23 @@ while host 0's compute is real.  In a real pod the peers are processes and
 the mesh is rebuilt from survivors; here the device set is this
 container's and ``sharding_fn`` re-places restored state onto it — the
 elastic interfaces (plan, re-shard, step-indexed data resume) are the same.
+
+Worker mode (``--process-id R --num-processes W``, launched by
+``repro.launch.supervisor``): this process is rank R of a real W-process
+fleet.  Each rank computes the identical full global batch (deterministic
+redundancy — no cross-process collectives, so a CPU fleet works and
+params stay bit-identical across ranks, which the result files prove via
+``tree_fingerprint``), publishes per-step heartbeat files the supervisor
+watches, dies with exit status 43 on an injected kill, and on a gang
+restart optionally restores STRIPED: each rank reads 1/W of the shard
+bytes and all-gathers the rest from peers over loopback TCP
+(``--stripe-ports``).  ``--total-steps`` gives the run's global horizon
+so a restarted worker resumes from its checkpoint and stops at the same
+step the uninterrupted run would — the bit-identical-resume contract.
+``--distributed jax`` additionally brings up ``jax.distributed`` via the
+version-compat shim (optional: coordinator rejoin after a mid-run worker
+restart is not reliable across jax versions, so supervision never
+depends on it).
 """
 from __future__ import annotations
 
@@ -48,11 +65,13 @@ import repro.obs as obs
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_bundle
 from repro.data import DataConfig, make_train_iterator
-from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.launch.mesh import (make_local_mesh, make_production_mesh,
+                               make_worker_mesh)
 from repro.optim import AdamWConfig, adamw_init
 from repro.parallel.sharding import param_specs
-from repro.runtime import (ChaosInjector, ChaosKilled, HeartbeatMonitor,
-                           StragglerPolicy, compat, plan_elastic_remesh)
+from repro.runtime import (ChaosInjector, ChaosKilled, FleetWorker,
+                           HeartbeatMonitor, StragglerPolicy, compat,
+                           plan_elastic_remesh, tree_fingerprint)
 from repro.training import GradGuard, GuardPolicy, TrainHyper, make_train_step
 
 
@@ -61,17 +80,34 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         ckpt_dir: str | None = None, ckpt_every: int = 10,
         microbatches: int = 1, lr: float = 3e-4,
         log_every: int = 1, chaos=None, chaos_seed: int = 0,
-        n_hosts: int = 1, hb_timeout_steps: float = 4.0,
-        straggler_factor: float = 2.0, straggler_patience: int = 3,
+        n_hosts: int = 1, hb_timeout_steps: float | None = None,
+        straggler_factor: float | None = None,
+        straggler_patience: int | None = None,
         guard_policy: GuardPolicy | None = None,
         max_recoveries: int = 8, trace_out: str | None = None,
-        metrics_out: str | None = None, telemetry=None) -> dict:
+        metrics_out: str | None = None, telemetry=None,
+        fleet: FleetWorker | None = None,
+        total_steps: int | None = None) -> dict:
     if chaos is not None and not isinstance(chaos, ChaosInjector):
         chaos = ChaosInjector(chaos, seed=chaos_seed)
+    if fleet is not None and fleet.distributed == "jax" and fleet.coordinator:
+        # must run before any other jax call (backend init is sticky)
+        fleet.dist_ok = compat.distributed_initialize(
+            fleet.coordinator, fleet.num_processes, fleet.process_id)
     bundle = get_bundle(arch, smoke=smoke)
-    mesh = {"local": make_local_mesh,
-            "single": make_production_mesh,
-            "multi": lambda: make_production_mesh(multi_pod=True)}[mesh_kind]()
+    if fleet is not None:
+        mesh = make_worker_mesh()
+    else:
+        mesh = {"local": make_local_mesh,
+                "single": make_production_mesh,
+                "multi": lambda: make_production_mesh(multi_pod=True)
+                }[mesh_kind]()
+    # captured while the (optional) distributed backend is known-alive;
+    # with jax.distributed up these are GLOBAL counts (process_count == 1
+    # means the barrier never formed; device_count additionally scales
+    # with any forced host-platform device multiplicity)
+    n_devices = jax.device_count()
+    n_procs = jax.process_count()
 
     key = jax.random.PRNGKey(0)
     params = bundle.init_params(key)
@@ -98,21 +134,43 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
 
     start_step = 0
     mgr = None
+    exchange = None
+    # with replicated fleet compute every rank holds identical state, so
+    # rank 0 alone writes checkpoints (it is host 0, the manifest writer);
+    # every rank restores from the shared dir
+    can_save = fleet is None or fleet.process_id == 0
     if ckpt_dir:
-        mgr = CheckpointManager(ckpt_dir)
+        mgr = CheckpointManager(
+            ckpt_dir,
+            fault_hook=chaos.checkpoint_write_hook if chaos is not None
+            and can_save else None)
+        stripe = None
+        if fleet is not None and fleet.striped_restore:
+            # collective striped restore: valid only on a gang start where
+            # every rank reaches this point (the supervisor guarantees it
+            # by passing --striped-restore to whole gangs only)
+            exchange = fleet.make_exchange()
+            if exchange is not None:
+                stripe = (fleet.process_id, fleet.num_processes, exchange)
         restored = mgr.restore({"params": params, "opt": opt},
-                               sharding_fn=sharding_fn)
+                               sharding_fn=sharding_fn, stripe=stripe)
         if restored is not None:
             start_step, tree = restored
             params, opt = tree["params"], tree["opt"]
-            print(f"[train] restored step {start_step} from {ckpt_dir}")
+            print(f"[train] restored step {start_step} from {ckpt_dir}"
+                  f"{' (striped)' if stripe else ''}")
 
     # the LR schedule spans the run's GLOBAL horizon (restored start +
     # remaining steps), so a crash-restarted run rebuilds the exact
     # schedule the uninterrupted run used — bit-identical resume depends
-    # on it (a schedule over "steps remaining" would diverge post-warmup)
+    # on it (a schedule over "steps remaining" would diverge post-warmup).
+    # `total_steps` (the supervisor's fixed horizon) pins that endpoint
+    # explicitly so a restarted worker stops where the uninterrupted run
+    # would, instead of running `steps` more from wherever it restored.
+    end_step = max(total_steps, start_step) if total_steps is not None \
+        else start_step + steps
     hyper = TrainHyper(optimizer=AdamWConfig(
-        lr=lr, warmup_steps=5, total_steps=max(start_step + steps, 10)),
+        lr=lr, warmup_steps=5, total_steps=max(end_step, 10)),
         microbatches=microbatches)
     step_fn = make_train_step(bundle.forward, hyper)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
@@ -134,9 +192,12 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
             tel = obs.get_telemetry()
     monitor = HeartbeatMonitor(
         list(range(n_hosts)),
-        StragglerPolicy(heartbeat_timeout_s=hb_timeout_steps,
-                        straggler_factor=straggler_factor,
-                        patience=straggler_patience),
+        StragglerPolicy.from_env(
+            heartbeat_timeout_s=hb_timeout_steps,
+            straggler_factor=straggler_factor,
+            patience=straggler_patience,
+            default=StragglerPolicy(heartbeat_timeout_s=4.0,
+                                    straggler_factor=2.0, patience=3)),
         clock=lambda: vclock[0])
     guard = GradGuard(guard_policy or GuardPolicy())
 
@@ -157,10 +218,22 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
     extras = make_extras(global_batch // n_data_hosts)
 
     history, step_log, events = [], [], []
-    end_step = start_step + steps
     i = start_step
     recoveries = 0
     last_saved = start_step if mgr else None
+
+    def ckpt_wait(at_step: int) -> bool:
+        """Land the in-flight async save; a FAILED WRITE (e.g. chaos
+        diskfull -> ENOSPC) is an event, never a crash — a full disk
+        costs recovery-point age, not the run."""
+        try:
+            mgr.wait()
+            return True
+        except OSError as e:
+            events.append({"kind": "ckpt_save_failed", "step": at_step,
+                           "error": str(e)})
+            print(f"[train] checkpoint save failed ({e}); continuing")
+            return False
 
     def restore_or_keep(reason: str, at_step: int) -> int:
         """RESTORE state: rewind to the newest intact checkpoint (the
@@ -172,7 +245,7 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                 events.append({"kind": "rollback_unavailable",
                                "step": at_step, "reason": reason})
                 return at_step
-            mgr.wait()
+            ckpt_wait(at_step)
             restored = mgr.restore({"params": params, "opt": opt},
                                    sharding_fn=sharding_fn)
             if restored is None:
@@ -210,15 +283,29 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
         with compat.set_mesh(mesh):
             while i < end_step:
                 vclock[0] += 1.0
+                if fleet is not None and not (
+                        chaos is not None
+                        and chaos.partitioned(i, fleet.process_id)):
+                    fleet.heartbeat(i)
                 if chaos is not None:
                     try:
-                        chaos.maybe_kill(i)   # raises ChaosKilled (exit 43)
+                        # raises ChaosKilled (exit 43); fleet workers die
+                        # only when the spec targets their rank
+                        chaos.maybe_kill(
+                            i, rank=fleet.process_id if fleet else None)
                     except ChaosKilled:
                         # preemption grace (SIGTERM-style): an in-flight
                         # async save lands before death, so "the last
-                        # completed checkpoint" is a deterministic notion
+                        # completed checkpoint" is a deterministic notion.
+                        # NOTHING here may displace the kill — a pending
+                        # save error surfacing now would turn exit 43
+                        # into exit 1 and the supervisor would misread
+                        # chaos as a crash
                         if mgr:
-                            mgr.wait()
+                            try:
+                                mgr.wait()
+                            except Exception:
+                                pass
                         raise
 
                 t0 = time.time()
@@ -316,27 +403,50 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20,
                                 trigger=guard.last_trigger)
                     events.append({"kind": "skip", "step": i})
 
-                if mgr and (i + 1) % ckpt_every == 0:
+                if mgr and can_save and (i + 1) % ckpt_every == 0:
+                    ckpt_wait(i)   # surface a prior failed write first
                     mgr.save_async(i + 1, {"params": params, "opt": opt})
                     last_saved = i + 1
                     if chaos is not None and chaos.wants_corrupt(i + 1):
-                        mgr.wait()             # land it, then damage it
-                        chaos.maybe_corrupt(ckpt_dir, i + 1)
+                        if ckpt_wait(i + 1):   # land it, then damage it
+                            chaos.maybe_corrupt(ckpt_dir, i + 1)
                 i += 1
-            if mgr and last_saved != end_step:
-                mgr.save_async(end_step, {"params": params, "opt": opt})
-            if mgr:
-                mgr.wait()
+            if mgr and can_save:
+                final_ok = ckpt_wait(end_step)
+                if last_saved != end_step or not final_ok:
+                    mgr.save_async(end_step,
+                                   {"params": params, "opt": opt})
+                    ckpt_wait(end_step)
     finally:
-        it.close()
-        drain_chaos_instants(i)
-        tel.finish(run_span, end_step=i)
-        # artifacts land even when a chaos kill unwinds the loop — the
-        # restart inspects the trace of the run that died
-        if trace_out:
-            tel.write_trace(trace_out)
-        if metrics_out:
-            tel.write_metrics(metrics_out)
+        # teardown must never displace an in-flight ChaosKilled (exit 43 is
+        # the supervisor's restart signal) — every item is individually
+        # contained
+        for teardown in (it.close,
+                         lambda: drain_chaos_instants(i),
+                         lambda: tel.finish(run_span, end_step=i),
+                         # artifacts land even when a chaos kill unwinds
+                         # the loop — the restart inspects the dead run's
+                         # trace
+                         lambda: trace_out and tel.write_trace(trace_out),
+                         lambda: metrics_out
+                         and tel.write_metrics(metrics_out),
+                         lambda: exchange and exchange.close(),
+                         lambda: fleet is not None and fleet.dist_ok
+                         and compat.distributed_shutdown()):
+            try:
+                teardown()
+            except Exception as e:
+                print(f"[train] teardown error (ignored): {e!r}")
+    if fleet is not None:
+        fleet.write_result({
+            "params_crc": tree_fingerprint({"params": params, "opt": opt}),
+            "first_loss": history[0] if history else None,
+            "final_loss": history[-1] if history else None,
+            "start_step": start_step, "end_step": end_step,
+            "dist_ok": fleet.dist_ok,
+            "device_count": n_devices,
+            "process_count": n_procs,
+        })
     return {"losses": history, "steps": step_log, "events": events,
             "params": params, "opt": opt,
             "telemetry": tel.snapshot() if tel.enabled else None}
@@ -360,29 +470,74 @@ def main():
                     metavar="SPEC",
                     help="inject a fault (repeatable): kill@N, nan@N, "
                          "silence@N:host=H, slow@N:host=H,factor=F, "
-                         "corrupt@N:mode=flip|truncate")
+                         "corrupt@N:mode=flip|truncate, diskfull@N, "
+                         "partition@N:host=H (sigkill@N:host=H is "
+                         "supervisor-side; see repro.launch.supervisor)")
     ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--n-hosts", type=int, default=1,
                     help="simulated fleet size (peers heartbeat "
                          "synthetically; host 0 is this process)")
-    ap.add_argument("--hb-timeout-steps", type=float, default=4.0)
+    ap.add_argument("--hb-timeout-steps", type=float, default=None,
+                    help="heartbeat timeout in virtual steps (default 4; "
+                         "env REPRO_HEARTBEAT_TIMEOUT)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome trace JSON (perfetto-loadable) "
                          "of the RUN/REMESH/RESTORE state machine")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the metrics-registry snapshot as JSON")
+    # -- real-fleet worker mode (passed by repro.launch.supervisor) --------
+    ap.add_argument("--process-id", type=int, default=0, metavar="R")
+    ap.add_argument("--num-processes", type=int, default=None, metavar="W",
+                    help="run as rank R of a W-process fleet")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT")
+    ap.add_argument("--fleet-dir", default=None, metavar="DIR",
+                    help="shared dir for heartbeat files")
+    ap.add_argument("--fleet-tag", type=int, default=None,
+                    help="stable worker id across re-mesh renumbering")
+    ap.add_argument("--stripe-ports", default=None, metavar="P0,P1,...",
+                    help="per-rank TCP ports for striped restore")
+    ap.add_argument("--striped-restore", action="store_true")
+    ap.add_argument("--distributed", default="none",
+                    choices=["none", "jax"])
+    ap.add_argument("--result-out", default=None, metavar="PATH")
+    ap.add_argument("--total-steps", type=int, default=None,
+                    help="global step horizon (restart-safe endpoint); "
+                         "overrides --steps counting from the restore")
     a = ap.parse_args()
-    out = run(a.arch, smoke=a.smoke, steps=a.steps, seq_len=a.seq_len,
-              global_batch=a.global_batch, mesh_kind=a.mesh,
-              ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
-              microbatches=a.microbatches, lr=a.lr, chaos=a.chaos,
-              chaos_seed=a.chaos_seed, n_hosts=a.n_hosts,
-              hb_timeout_steps=a.hb_timeout_steps,
-              trace_out=a.trace_out, metrics_out=a.metrics_out)
+    fleet = None
+    if a.num_processes is not None:
+        ports = tuple(int(p) for p in a.stripe_ports.split(",")) \
+            if a.stripe_ports else ()
+        fleet = FleetWorker(process_id=a.process_id,
+                            num_processes=a.num_processes,
+                            fleet_dir=a.fleet_dir, tag=a.fleet_tag,
+                            coordinator=a.coordinator, stripe_ports=ports,
+                            striped_restore=a.striped_restore,
+                            distributed=a.distributed,
+                            result_out=a.result_out)
+    try:
+        out = run(a.arch, smoke=a.smoke, steps=a.steps, seq_len=a.seq_len,
+                  global_batch=a.global_batch, mesh_kind=a.mesh,
+                  ckpt_dir=a.ckpt_dir, ckpt_every=a.ckpt_every,
+                  microbatches=a.microbatches, lr=a.lr, chaos=a.chaos,
+                  chaos_seed=a.chaos_seed, n_hosts=a.n_hosts,
+                  hb_timeout_steps=a.hb_timeout_steps,
+                  trace_out=a.trace_out, metrics_out=a.metrics_out,
+                  fleet=fleet, total_steps=a.total_steps)
+    except ChaosKilled as e:
+        # belt-and-braces: ChaosKilled IS a SystemExit(43), but anything
+        # that re-wrapped it on the way up must not change the status the
+        # supervisor keys its restart policy on
+        raise SystemExit(e.code)
     losses = out["losses"]
-    print(f"[train] done: first loss {losses[0]:.4f}, "
-          f"last loss {losses[-1]:.4f}, "
-          f"{len(out['events'])} fault events")
+    if losses:
+        print(f"[train] done: first loss {losses[0]:.4f}, "
+              f"last loss {losses[-1]:.4f}, "
+              f"{len(out['events'])} fault events")
+    else:
+        # a restarted worker can restore AT the horizon: nothing to do
+        # is success, not a crash
+        print("[train] done: horizon already reached at restore; no steps")
 
 
 if __name__ == "__main__":

@@ -1,8 +1,17 @@
-from . import chaos, compat
-from .chaos import ChaosInjector, ChaosKilled, ChaosSpec, parse_chaos
+from . import chaos, compat, fleet, supervisor
+from .chaos import (ChaosInjector, ChaosKilled, ChaosSpec, parse_chaos,
+                    split_spec_strings)
 from .fault import (ElasticPlan, HeartbeatMonitor, HostState, StragglerPolicy,
                     plan_elastic_remesh)
+from .fleet import (FleetWorker, LocalStripeExchange, StripeExchangeTimeout,
+                    TcpStripeExchange, allocate_ports, read_heartbeat,
+                    tree_fingerprint)
+from .supervisor import LaunchSpec, RestartPolicy, Supervisor
 
 __all__ = ["ChaosInjector", "ChaosKilled", "ChaosSpec", "ElasticPlan",
-           "HeartbeatMonitor", "HostState", "StragglerPolicy", "chaos",
-           "compat", "parse_chaos", "plan_elastic_remesh"]
+           "FleetWorker", "HeartbeatMonitor", "HostState", "LaunchSpec",
+           "LocalStripeExchange", "RestartPolicy", "StragglerPolicy",
+           "StripeExchangeTimeout", "Supervisor", "TcpStripeExchange",
+           "allocate_ports", "chaos", "compat", "fleet", "parse_chaos",
+           "plan_elastic_remesh", "read_heartbeat", "split_spec_strings",
+           "supervisor", "tree_fingerprint"]

@@ -31,6 +31,30 @@ Fault taxonomy (spec strings, parsed by :func:`parse_chaos`):
                                    half) — restore must detect it by CRC
                                    and fall back to an older intact step
 
+Process-level faults (the real-fleet runtime; see
+``repro.runtime.supervisor``):
+
+  ``sigkill@N:host=H``             SUPERVISOR-side: SIGKILL worker H once
+                                   its heartbeat reports step >= N — an
+                                   uncatchable death (no grace, no atexit)
+                                   exercising the crash-restart path as a
+                                   kernel would deliver it
+  ``partition@N:host=H,duration=D``
+                                   worker H stops publishing heartbeats
+                                   for D steps starting at N (coordinator
+                                   partition) — the supervisor's hang
+                                   detector must SIGKILL + restart it
+  ``diskfull@N``                   the checkpoint write at train step N
+                                   fails with ENOSPC — training must log
+                                   the failed save and CONTINUE (a full
+                                   disk costs recovery-point age, never
+                                   the run)
+
+``kill``/``sigkill``/``partition`` specs target host 1 by default (host 0
+writes the checkpoint manifests; drilling a non-primary is the common
+case) — in the single-process simulated fleet ``kill`` fires regardless
+of target because the only real process IS every host.
+
 Usage::
 
     with ChaosInjector(["kill@12", "nan@5"], seed=0) as chaos:
@@ -52,13 +76,19 @@ import numpy as np
 # from "I am broken".
 KILL_EXIT_CODE = 43
 
-KINDS = ("kill", "silence", "slow", "nan", "corrupt")
+KINDS = ("kill", "silence", "slow", "nan", "corrupt",
+         "sigkill", "partition", "diskfull")
+
+# Kinds the process supervisor applies itself (everything else is handed
+# through to the worker processes' --chaos flags).
+SUPERVISOR_KINDS = ("sigkill",)
 
 # How long a fault stays active when the spec gives no duration: a NaN
 # burst is one step, but silence/slowness persist until eviction.
 _FOREVER = 1 << 30
 _DEFAULT_DURATION = {"kill": 1, "silence": _FOREVER, "slow": _FOREVER,
-                     "nan": 1, "corrupt": 1}
+                     "nan": 1, "corrupt": 1, "sigkill": 1,
+                     "partition": _FOREVER, "diskfull": 1}
 
 
 class ChaosKilled(SystemExit):
@@ -91,10 +121,12 @@ class ChaosSpec:
             object.__setattr__(self, "duration",
                                _DEFAULT_DURATION[self.kind])
         if self.host < 0:
-            # silence/slow target a PEER by default (host 0 is "us");
-            # corrupt targets our own shard 0
+            # silence/slow/kill/sigkill/partition target a PEER by default
+            # (host 0 is "us" / the manifest writer); corrupt targets our
+            # own shard 0, diskfull our own writer
             object.__setattr__(self, "host",
-                               0 if self.kind == "corrupt" else 1)
+                               0 if self.kind in ("corrupt", "diskfull")
+                               else 1)
 
     def active(self, step: int) -> bool:
         return self.step <= step < self.step + self.duration
@@ -121,6 +153,16 @@ def parse_chaos(text: str) -> ChaosSpec:
         else:
             raise ValueError(f"chaos spec {text!r}: unknown option {k!r}")
     return ChaosSpec(**kw)
+
+
+def split_spec_strings(specs) -> tuple[list[str], list[str]]:
+    """Partition raw ``--chaos`` strings into (supervisor-side,
+    worker-side) halves; the supervisor keeps ``sigkill`` for itself and
+    forwards the rest to the worker processes' own ``--chaos`` flags."""
+    sup, wrk = [], []
+    for s in specs:
+        (sup if parse_chaos(s).kind in SUPERVISOR_KINDS else wrk).append(s)
+    return sup, wrk
 
 
 def corrupt_checkpoint(ckpt_dir: str, step: int, *, host_id: int = 0,
@@ -184,10 +226,43 @@ class ChaosInjector:
 
     # -- fault points (one per taxonomy row) --------------------------------
 
-    def maybe_kill(self, step: int) -> None:
+    def maybe_kill(self, step: int, rank: int | None = None) -> None:
+        """Raise :class:`ChaosKilled` when a kill spec is active.
+
+        ``rank=None`` (the single-process simulated fleet) dies on ANY
+        active kill — the one real process is every host.  A real fleet
+        worker passes its rank and dies only when targeted (``host=``
+        defaults to 1, a peer of the manifest-writing rank 0)."""
         for sp in self._active("kill", step):
+            if rank is not None and sp.host != rank:
+                continue
             self._log(f"kill@{step}")
             raise ChaosKilled(step)
+
+    def partitioned(self, step: int, rank: int) -> bool:
+        """True while ``rank`` must suppress its heartbeats (coordinator
+        partition); the supervisor's hang detector takes it from there."""
+        for sp in self._active("partition", step):
+            if sp.host == rank:
+                self._log(f"partition@{sp.step}:host={rank}")
+                return True
+        return False
+
+    def checkpoint_write_hook(self, saved_step: int) -> None:
+        """Installed as ``CheckpointManager(fault_hook=...)``: fails the
+        write of step ``saved_step`` with ENOSPC when a diskfull spec
+        targets it.  Runs on the manager's background writer thread; the
+        error surfaces at the train loop's next ``wait()``."""
+        import errno
+        for sp in self.specs:
+            if sp.kind == "diskfull" and sp.step == saved_step:
+                self._log(f"diskfull@{saved_step}")
+                raise OSError(errno.ENOSPC,
+                              f"chaos: disk full writing checkpoint step "
+                              f"{saved_step}")
+
+    def supervisor_specs(self) -> list[ChaosSpec]:
+        return [sp for sp in self.specs if sp.kind in SUPERVISOR_KINDS]
 
     def heartbeat_silenced(self, host: int, step: int) -> bool:
         for sp in self._active("silence", step):

@@ -109,6 +109,17 @@ Shim inventory (new spelling -> introduced -> old fallback):
     ``jax.random.PRNGKey`` (raw uint32 keys).  Both feed every
     ``jax.random`` sampler in the supported range.
 
+``distributed_initialize(coordinator, num_processes, process_id)``
+    Multi-process runtime bring-up (``jax.distributed.initialize``).
+    The core three keywords are stable across the supported range, but
+    the surrounding signature drifts (0.6 added
+    ``cluster_detection_method``; ``initialization_timeout`` moved) — so
+    the call is filtered against the live signature and failure is a
+    WARNED ``False``, never an exception: a fleet worker whose
+    distributed runtime cannot come up still runs its local replica, it
+    just reports ``dist_ok=False``.  ``distributed_shutdown()`` is the
+    matching best-effort teardown.
+
 Import-order note: the Pallas shims resolve ``jax.experimental.pallas``
 lazily on first use (cached thereafter), so sim/benchmark entry points
 that never touch a kernel don't pay the Pallas import; nothing in this
@@ -117,7 +128,9 @@ module touches device state, so importing it cannot pin a backend.
 from __future__ import annotations
 
 import contextlib
+import inspect
 import threading
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
@@ -131,6 +144,7 @@ __all__ = [
     "cost_analysis", "memory_stats",
     "tree_map", "tree_leaves", "tree_flatten", "tree_unflatten",
     "random_key",
+    "distributed_initialize", "distributed_shutdown",
 ]
 
 JAX_VERSION: tuple[int, ...] = tuple(
@@ -361,6 +375,60 @@ def memory_stats(compiled) -> dict[str, int]:
     tmp = _get("temp_size_in_bytes")
     return {"argument_bytes": arg, "output_bytes": out,
             "temp_bytes": tmp, "peak_bytes": arg + tmp}
+
+
+# ---------------------------------------------------------------------------
+# Distributed runtime: multi-process peers
+# ---------------------------------------------------------------------------
+
+def distributed_initialize(coordinator_address: str, num_processes: int,
+                           process_id: int, *,
+                           timeout_s: float | None = None,
+                           **extra) -> bool:
+    """Bring up the multi-process runtime; ``True`` iff peers are joined.
+
+    Filters the request against the live ``jax.distributed.initialize``
+    signature (keywords around the stable core drift across 0.4.x/0.6.x)
+    and degrades to a warned ``False`` on any failure — callers treat the
+    distributed runtime as an upgrade, not a requirement.  A second call
+    in an already-initialized process returns ``True``.
+    """
+    dist = getattr(jax, "distributed", None)
+    init = getattr(dist, "initialize", None)
+    if init is None:  # pragma: no cover - every release in range has it
+        warnings.warn("jax.distributed.initialize not found; running "
+                      "without a distributed runtime", RuntimeWarning)
+        return False
+    kwargs: dict[str, Any] = {"coordinator_address": coordinator_address,
+                              "num_processes": int(num_processes),
+                              "process_id": int(process_id), **extra}
+    if timeout_s is not None:
+        kwargs["initialization_timeout"] = int(timeout_s)
+    try:
+        params = inspect.signature(init).parameters
+        if not any(p.kind is inspect.Parameter.VAR_KEYWORD
+                   for p in params.values()):
+            kwargs = {k: v for k, v in kwargs.items() if k in params}
+    except (TypeError, ValueError):  # pragma: no cover - C-level signature
+        pass
+    try:
+        init(**kwargs)
+        return True
+    except Exception as e:  # noqa: BLE001 — availability probe by contract
+        if "already" in str(e).lower():
+            return True
+        warnings.warn(f"jax distributed runtime failed to initialize "
+                      f"({type(e).__name__}: {e}); continuing single-process",
+                      RuntimeWarning)
+        return False
+
+
+def distributed_shutdown() -> None:
+    """Best-effort ``jax.distributed.shutdown`` (no-op when never up)."""
+    try:
+        jax.distributed.shutdown()
+    except Exception:  # noqa: BLE001 — teardown must never mask exit status
+        pass
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,7 @@ stealing for SPMD jobs where the collective pace is set by the slowest host.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 
 
@@ -30,9 +31,54 @@ class HostState:
 
 @dataclasses.dataclass(frozen=True)
 class StragglerPolicy:
+    """Eviction thresholds — note the TWO time bases, easy to confuse:
+
+    * ``heartbeat_timeout_s`` is measured on the monitor's CLOCK — wall
+      seconds under the process supervisor, but *virtual steps* (the
+      train loop ticks its clock 1.0 per step) in the simulated in-loop
+      fleet.  A host whose last heartbeat is older than this is dead.
+    * Straggler detection is STEP-RELATIVE and clock-free: a host is
+      struck when its last *reported step time* exceeds
+      ``straggler_factor`` x the median of its peers' step times, and
+      evicted after ``patience`` consecutive strikes.  Rescaling the
+      clock changes heartbeat timeouts but never straggler verdicts.
+
+    Env overrides (read by :meth:`from_env`, used by the train launcher
+    when no explicit value is passed): ``REPRO_HEARTBEAT_TIMEOUT``
+    (float, clock units), ``REPRO_STRAGGLER_FACTOR`` (float),
+    ``REPRO_STRAGGLER_PATIENCE`` (int).
+    """
+
     heartbeat_timeout_s: float = 60.0
     straggler_factor: float = 2.0
     patience: int = 5
+
+    @classmethod
+    def from_env(cls, heartbeat_timeout_s: float | None = None,
+                 straggler_factor: float | None = None,
+                 patience: int | None = None,
+                 default: "StragglerPolicy | None" = None
+                 ) -> "StragglerPolicy":
+        """Resolve each field as: explicit argument > env var > ``default``
+        (a policy carrying the caller's baseline; class defaults if None).
+        """
+        base = default if default is not None else cls()
+
+        def pick(explicit, env_name, cast, fallback):
+            if explicit is not None:
+                return explicit
+            raw = os.environ.get(env_name)
+            return cast(raw) if raw not in (None, "") else fallback
+
+        return cls(
+            heartbeat_timeout_s=pick(heartbeat_timeout_s,
+                                     "REPRO_HEARTBEAT_TIMEOUT", float,
+                                     base.heartbeat_timeout_s),
+            straggler_factor=pick(straggler_factor,
+                                  "REPRO_STRAGGLER_FACTOR", float,
+                                  base.straggler_factor),
+            patience=pick(patience, "REPRO_STRAGGLER_PATIENCE", int,
+                          base.patience))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -261,3 +261,172 @@ def test_silenced_host_evicted_and_loop_remeshes():
     assert remesh[0]["plan"]["n_hosts"] == 1
     assert out["steps"][-1] == 9                   # ran to the end
     assert all(np.isfinite(out["losses"]))
+
+
+# ---------------------------------------------------------------------------
+# process-level chaos kinds (real-fleet runtime)
+# ---------------------------------------------------------------------------
+
+def test_parse_process_level_chaos_specs():
+    sp = parse_chaos("sigkill@9:host=2")
+    assert (sp.kind, sp.step, sp.host, sp.duration) == ("sigkill", 9, 2, 1)
+    assert parse_chaos("sigkill@9").host == 1       # targets a peer
+    sp = parse_chaos("partition@4:host=1,duration=6")
+    assert (sp.kind, sp.host, sp.duration) == ("partition", 1, 6)
+    assert parse_chaos("partition@4").duration >= 10 ** 6   # dark forever
+    assert parse_chaos("diskfull@3").host == 0      # our own writer
+
+
+def test_rank_targeted_kill():
+    """A fleet worker passes its rank and dies only when targeted; the
+    single-process simulated fleet (rank=None) dies on any active kill
+    because the one real process is every host."""
+    chaos = ChaosInjector(["kill@5:host=1"])
+    chaos.maybe_kill(5, rank=0)                     # not the target
+    assert chaos.fired == []
+    with pytest.raises(ChaosKilled):
+        chaos.maybe_kill(5, rank=1)
+    with pytest.raises(ChaosKilled):
+        ChaosInjector(["kill@5:host=1"]).maybe_kill(5)       # rank=None
+
+
+def test_partition_window_is_rank_and_step_scoped():
+    chaos = ChaosInjector(["partition@3:host=2,duration=2"])
+    assert not chaos.partitioned(2, 2)
+    assert chaos.partitioned(3, 2) and chaos.partitioned(4, 2)
+    assert not chaos.partitioned(5, 2)              # window elapsed
+    assert not chaos.partitioned(3, 1)              # other rank unaffected
+
+
+def test_diskfull_hook_raises_enospc_for_target_step_only():
+    import errno
+    chaos = ChaosInjector(["diskfull@4"])
+    chaos.checkpoint_write_hook(3)                  # other steps untouched
+    with pytest.raises(OSError) as ei:
+        chaos.checkpoint_write_hook(4)
+    assert ei.value.errno == errno.ENOSPC
+    assert "diskfull@4" in chaos.fired
+
+
+def test_split_and_supervisor_spec_views():
+    from repro.runtime.chaos import split_spec_strings
+    sup, wrk = split_spec_strings(["sigkill@7:host=1", "kill@3", "nan@2"])
+    assert sup == ["sigkill@7:host=1"] and wrk == ["kill@3", "nan@2"]
+    chaos = ChaosInjector(["sigkill@7:host=1", "kill@3"])
+    assert [sp.kind for sp in chaos.supervisor_specs()] == ["sigkill"]
+
+
+def test_diskfull_in_train_loop_costs_recovery_point_not_run(tmp_path):
+    """diskfull@4 fails the step-4 async save with ENOSPC: the loop logs
+    a ckpt_save_failed event and keeps training; later saves land."""
+    from repro.launch.train import run
+    ckpt = str(tmp_path)
+    out = run(ARCH, steps=8, ckpt_every=2, ckpt_dir=ckpt,
+              chaos=["diskfull@4"], **TRAIN_KW)
+    fails = [e for e in out["events"] if e["kind"] == "ckpt_save_failed"]
+    assert len(fails) == 1 and "disk full" in fails[0]["error"]
+    steps = verified_steps(ckpt)
+    assert 4 not in steps                           # the failed write
+    assert 8 in steps                               # the run went on
+
+
+# ---------------------------------------------------------------------------
+# StragglerPolicy env resolution
+# ---------------------------------------------------------------------------
+
+def test_straggler_policy_from_env_precedence(monkeypatch):
+    """Resolution order per field: explicit argument > env var > default
+    policy baseline."""
+    monkeypatch.setenv("REPRO_HEARTBEAT_TIMEOUT", "9.5")
+    monkeypatch.setenv("REPRO_STRAGGLER_PATIENCE", "7")
+    monkeypatch.delenv("REPRO_STRAGGLER_FACTOR", raising=False)
+    base = StragglerPolicy(heartbeat_timeout_s=4.0, straggler_factor=2.5,
+                           patience=3)
+    p = StragglerPolicy.from_env(default=base)
+    assert p.heartbeat_timeout_s == 9.5             # env beats default
+    assert p.patience == 7
+    assert p.straggler_factor == 2.5                # default fills the gap
+    q = StragglerPolicy.from_env(heartbeat_timeout_s=1.25, default=base)
+    assert q.heartbeat_timeout_s == 1.25            # explicit beats env
+    monkeypatch.setenv("REPRO_STRAGGLER_FACTOR", "")
+    assert StragglerPolicy.from_env(default=base).straggler_factor == 2.5
+
+
+# ---------------------------------------------------------------------------
+# checkpoint save/restore races (satellite: concurrency invariants)
+# ---------------------------------------------------------------------------
+
+def test_restore_never_picks_uncommitted_step_dir(tmp_path):
+    """A save in flight is a step dir without a manifest: newest-step
+    discovery must skip it and restore the newest COMMITTED step."""
+    path = str(tmp_path)
+    t1 = _tree(1)
+    save_checkpoint(path, 4, t1)
+    newer = os.path.join(path, "step_00000008")     # shard landed, no
+    os.makedirs(newer)                              # manifest yet
+    np.savez(os.path.join(newer, "shard_0.npz"),
+             leaf_0=np.zeros(3, np.float32))
+    assert latest_step(path) == 4
+    step, tree = CheckpointManager(path).restore(t1)
+    assert step == 4
+    np.testing.assert_array_equal(tree["w"], t1["w"])
+
+
+def test_crash_mid_commit_stray_markers_both_directions(tmp_path):
+    """Crash between commit files: (a) a stray commit marker for a shard
+    the manifest never claims is ignored; (b) a manifest that claims a
+    shard whose marker landed but whose data did not fails verification
+    and restore falls back."""
+    path = str(tmp_path)
+    t = _tree(0)
+    save_checkpoint(path, 5, t)
+    with open(os.path.join(path, "step_00000005", "commit_7.json"),
+              "w") as f:
+        json.dump({"host_id": 7, "crc32": 0, "n_leaves": 99}, f)
+    ok, why = verify_checkpoint(path, 5)
+    assert ok, why                                  # (a) stray -> ignored
+    save_checkpoint(path, 6, t, n_hosts=2)          # shard 1 never written
+    with open(os.path.join(path, "step_00000006", "commit_1.json"),
+              "w") as f:
+        json.dump({"host_id": 1, "crc32": 123,
+                   "n_leaves": len(t)}, f)
+    ok, why = verify_checkpoint(path, 6)
+    assert not ok and "shard 1 missing" in why      # (b) marker != data
+    step, _ = CheckpointManager(path).restore(t)
+    assert step == 5
+
+
+def test_concurrent_save_and_restore_race(tmp_path):
+    """A writer committing new steps while a reader restores in a loop:
+    the reader must ALWAYS get a fully-committed tree (bit-equal to what
+    that step saved) and never crash on a half-written newest dir."""
+    import threading
+    import time as _time
+    path = str(tmp_path)
+    trees = {s: _tree(s) for s in range(1, 13)}
+    save_checkpoint(path, 1, trees[1])              # reader never starves
+    done = threading.Event()
+    errors = []
+
+    def writer():
+        try:
+            for s in range(2, 13):
+                save_checkpoint(path, s, trees[s])
+                _time.sleep(0.002)
+        finally:
+            done.set()
+
+    def reader():
+        mgr = CheckpointManager(path)
+        try:
+            while not done.is_set():
+                step, tree = mgr.restore(trees[1])
+                np.testing.assert_array_equal(tree["w"], trees[step]["w"])
+        except Exception as e:  # noqa: BLE001 — surfaced to the test
+            errors.append(e)
+
+    tw, tr = threading.Thread(target=writer), threading.Thread(target=reader)
+    tw.start(), tr.start()
+    tw.join(), tr.join()
+    assert not errors, errors
+    assert verified_steps(path)[-1] == 12

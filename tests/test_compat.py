@@ -230,3 +230,67 @@ def test_no_direct_drift_api_call_sites():
         text = path.read_text()
         offenders += [f"{path.name}: {b}" for b in banned if b in text]
     assert not offenders, offenders
+
+
+# ---------------------------------------------------------------------------
+# Distributed runtime shim
+# ---------------------------------------------------------------------------
+
+def test_distributed_initialize_filters_kwargs_to_live_signature(monkeypatch):
+    """Keywords the installed ``jax.distributed.initialize`` doesn't take
+    are dropped; ``timeout_s`` is mapped onto ``initialization_timeout``
+    (an int of seconds) when the signature accepts it."""
+    calls = []
+
+    def fake_init(coordinator_address, num_processes, process_id,
+                  initialization_timeout=None):
+        calls.append(dict(coordinator_address=coordinator_address,
+                          num_processes=num_processes,
+                          process_id=process_id,
+                          initialization_timeout=initialization_timeout))
+
+    monkeypatch.setattr(jax.distributed, "initialize", fake_init)
+    ok = compat.distributed_initialize("127.0.0.1:9999", 2, 1,
+                                       timeout_s=5.7,
+                                       local_device_ids=[0])  # not in sig
+    assert ok is True
+    assert calls == [dict(coordinator_address="127.0.0.1:9999",
+                          num_processes=2, process_id=1,
+                          initialization_timeout=5)]
+
+
+def test_distributed_initialize_passes_extras_through_var_keyword(monkeypatch):
+    calls = []
+
+    def fake_init(coordinator_address, num_processes, process_id, **kw):
+        calls.append(kw)
+
+    monkeypatch.setattr(jax.distributed, "initialize", fake_init)
+    assert compat.distributed_initialize("127.0.0.1:9999", 2, 0,
+                                         cluster_detection_method="none")
+    assert calls == [{"cluster_detection_method": "none"}]
+
+
+def test_distributed_initialize_already_up_is_success(monkeypatch):
+    def fake_init(**kw):
+        raise RuntimeError("Distributed system is already initialized")
+
+    monkeypatch.setattr(jax.distributed, "initialize", fake_init)
+    assert compat.distributed_initialize("127.0.0.1:9999", 2, 0) is True
+
+
+def test_distributed_initialize_degrades_to_warned_false(monkeypatch):
+    def fake_init(**kw):
+        raise RuntimeError("connection refused")
+
+    monkeypatch.setattr(jax.distributed, "initialize", fake_init)
+    with pytest.warns(RuntimeWarning, match="continuing single-process"):
+        assert compat.distributed_initialize("127.0.0.1:9", 2, 0) is False
+
+
+def test_distributed_shutdown_never_raises(monkeypatch):
+    def boom():
+        raise RuntimeError("not initialized")
+
+    monkeypatch.setattr(jax.distributed, "shutdown", boom)
+    compat.distributed_shutdown()  # must swallow
