@@ -1,0 +1,134 @@
+"""Serving-fleet benchmark: what moving a KV page (instead of
+re-prefilling it) actually costs, and what a host loss costs the
+requests that survive it.
+
+One CSV row per drill on the in-process :class:`~repro.serving.LocalFleet`
+(engines share one bundle + params, so every completed request is
+token-identical to the single-engine baseline):
+
+  * ``fleet_migrate``   — seeded migration drill: two hosts, round-robin
+    placement, arrivals in waves so the second wave's shared prefix is
+    OWNED by the other host and must migrate.  ``us_per_call`` is the
+    mean wall time of one page migration (export -> CRC frame -> wire ->
+    import); derived columns report bytes per migrated page, pages
+    moved, and the directory hit rate.
+  * ``fleet_host_loss`` — ``die`` chaos mid-serve: ``us_per_call`` is
+    wall seconds per completed request; the derived columns report the
+    router's recovery latency in fleet ticks (death -> re-admitted
+    completion), retries, and tombstoned directory pages.
+  * ``fleet_hedge``     — an aggressive hedge deadline twins every slow
+    dispatch; derived reports the hedge rate (hedges / requests) and
+    that first-writer-wins kept every outcome ``ok``.
+
+Run directly: ``PYTHONPATH=src python benchmarks/bench_fleet_serving.py
+--smoke``; ``benchmarks/run.py`` collects the rows into
+``BENCH_smoke.json``.
+"""
+import argparse
+import time
+
+import numpy as np
+
+ARCH = "qwen3-4b"
+PAGE = 8
+
+
+def _prompts(vocab, n, *, shared_pages=3, suffix=6, seed=0):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(1, vocab, shared_pages * PAGE)
+    return [np.concatenate([shared, rng.integers(1, vocab, suffix)])
+            .astype(np.int32) for _ in range(n)]
+
+
+def _mk_fleet(n_hosts, *, chaos=None, **cfg_kw):
+    from repro.launch.serve import build_fleet
+    from repro.obs import Telemetry
+    from repro.obs.metrics import MetricsRegistry
+    from repro.serving import FleetConfig
+    cfg_kw.setdefault("placement", "round_robin")
+    tel = Telemetry(enabled=True, registry=MetricsRegistry())
+    fleet, vocab = build_fleet(ARCH, n_hosts, smoke=True, slots=2,
+                               max_len=64, max_new=4, kv_mode="paged",
+                               page_size=PAGE, chaos=chaos, telemetry=tel,
+                               fleet_cfg=FleetConfig(**cfg_kw))
+    return fleet, vocab, tel.metrics
+
+
+def _waves(fleet, prompts, wave=2, settle_ticks=None):
+    rids = []
+    for i in range(0, len(prompts), wave):
+        if rids:
+            if settle_ticks is None:
+                fleet.run()
+            else:
+                for _ in range(settle_ticks):
+                    fleet.step()
+        rids += [fleet.submit(p) for p in prompts[i:i + wave]]
+    fleet.run()
+    return rids
+
+
+def _bench_migrate(n_requests):
+    fleet, vocab, reg = _mk_fleet(2)
+    rids = _waves(fleet, _prompts(vocab, n_requests))
+    assert all(fleet.outcomes[r] == "ok" for r in rids)
+    st = fleet.stats()
+    assert st["migrations"]["ok"] >= 1 and st["page_exchange_bytes"] > 0, \
+        "migration drill moved no pages — pages were re-prefilled"
+    mig_s = reg.snapshot()["histograms"]["fleet_migration_s"]["mean"]
+    return (mig_s,
+            st["page_exchange_bytes"] / max(1, st["migrated_pages"]),
+            st["migrated_pages"], st["directory"]["hit_rate"])
+
+
+def _bench_host_loss(n_requests):
+    from repro.runtime.chaos import ChaosInjector
+    chaos = ChaosInjector([f"die@3:host=0"], seed=0)
+    fleet, vocab, reg = _mk_fleet(2, chaos=chaos)
+    t0 = time.perf_counter()
+    rids = _waves(fleet, _prompts(vocab, n_requests), settle_ticks=2)
+    wall = time.perf_counter() - t0
+    assert fleet.stats()["deaths"] == 1
+    done = sum(fleet.outcomes[r] == "ok" for r in rids)
+    hist = reg.snapshot()["histograms"].get("fleet_recovery_ticks", {})
+    st = fleet.stats()
+    return (wall / max(1, done), hist.get("mean", 0.0), st["retries"],
+            st["directory"]["tombstoned_pages"], done, len(rids))
+
+
+def _bench_hedge(n_requests):
+    fleet, vocab, _ = _mk_fleet(2, hedge_after=2, migrate=False)
+    t0 = time.perf_counter()
+    rids = [fleet.submit(p) for p in _prompts(vocab, n_requests)]
+    fleet.run()
+    wall = time.perf_counter() - t0
+    assert all(fleet.outcomes[r] == "ok" for r in rids)
+    return wall / len(rids), fleet.stats()["hedges"] / len(rids)
+
+
+def main(csv=True, smoke: bool = False):
+    n = 6 if smoke else 12
+    rows = []
+    mig_s, bpp, pages, hit = _bench_migrate(n)
+    rows.append(("fleet_migrate", mig_s * 1e6,
+                 f"bytes_per_page={bpp:.0f};pages={pages};"
+                 f"dir_hit_rate={hit:.2f}"))
+    per_req, rec_ticks, retries, tombs, done, total = _bench_host_loss(n)
+    rows.append(("fleet_host_loss", per_req * 1e6,
+                 f"recovery_ticks={rec_ticks:.1f};retries={retries};"
+                 f"tombstoned={tombs};completed={done}/{total}"))
+    per_req, rate = _bench_hedge(n)
+    rows.append(("fleet_hedge", per_req * 1e6,
+                 f"hedge_rate={rate:.2f}"))
+    if csv:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    a = ap.parse_args()
+    print("name,us_per_call,derived")
+    main(smoke=a.smoke)

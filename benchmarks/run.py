@@ -52,13 +52,14 @@ def main(argv=None) -> None:
     # start warm (see repro/core/autotune.py; delete .cache/ to reset).
     os.environ.setdefault("REPRO_SCHED_DISK_CACHE", "1")
     from benchmarks import (bench_attention, bench_dryrun, bench_fault,
-                            bench_kernels, bench_ring, bench_roofline_fig3,
-                            bench_roofline_fig4, bench_scheduler,
-                            bench_serving, bench_table3, bench_traffic)
+                            bench_fleet_serving, bench_kernels, bench_ring,
+                            bench_roofline_fig3, bench_roofline_fig4,
+                            bench_scheduler, bench_serving, bench_table3,
+                            bench_traffic)
     mods = [bench_scheduler, bench_table3, bench_roofline_fig3,
             bench_roofline_fig4, bench_kernels, bench_attention,
-            bench_serving, bench_traffic, bench_fault, bench_ring,
-            bench_dryrun]
+            bench_serving, bench_fleet_serving, bench_traffic, bench_fault,
+            bench_ring, bench_dryrun]
     if args.smoke:
         mods.remove(bench_kernels)   # Pallas interpret sweep: minutes on CPU
 

@@ -28,7 +28,9 @@ the snapshot renders it as the Prometheus-style string
 """
 from __future__ import annotations
 
+import contextlib
 import threading
+import time
 from typing import Any, Iterable, Mapping
 
 _QUANTILES = (0.5, 0.9, 0.99)
@@ -125,6 +127,16 @@ class MetricsRegistry:
             if h is None:
                 h = self._hists[key] = _Hist()
             h.observe(value)
+
+    @contextlib.contextmanager
+    def timer(self, name: str, **labels):
+        """Time a ``with`` block into histogram ``name`` (seconds) — the
+        fleet wraps page migrations and host-loss recovery in these."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.observe(name, time.perf_counter() - t0, **labels)
 
     def absorb(self, stats: Mapping[str, Any], *, prefix: str = "",
                **labels) -> None:

@@ -3,15 +3,19 @@ from .chaos import (ChaosInjector, ChaosKilled, ChaosSpec, parse_chaos,
                     split_spec_strings)
 from .fault import (ElasticPlan, HeartbeatMonitor, HostState, StragglerPolicy,
                     plan_elastic_remesh)
-from .fleet import (FleetWorker, LocalStripeExchange, StripeExchangeTimeout,
-                    TcpStripeExchange, allocate_ports, read_heartbeat,
-                    tree_fingerprint)
+from .fleet import (FleetWorker, LocalPageExchange, LocalStripeExchange,
+                    PageCorruptError, PageExchangeTimeout,
+                    StripeExchangeTimeout, TcpPageExchange,
+                    TcpStripeExchange, allocate_ports, decode_page_frame,
+                    encode_page_frame, read_heartbeat, tree_fingerprint)
 from .supervisor import LaunchSpec, RestartPolicy, Supervisor
 
 __all__ = ["ChaosInjector", "ChaosKilled", "ChaosSpec", "ElasticPlan",
            "FleetWorker", "HeartbeatMonitor", "HostState", "LaunchSpec",
-           "LocalStripeExchange", "RestartPolicy", "StragglerPolicy",
-           "StripeExchangeTimeout", "Supervisor", "TcpStripeExchange",
-           "allocate_ports", "chaos", "compat", "fleet", "parse_chaos",
-           "plan_elastic_remesh", "read_heartbeat", "split_spec_strings",
-           "supervisor", "tree_fingerprint"]
+           "LocalPageExchange", "LocalStripeExchange", "PageCorruptError",
+           "PageExchangeTimeout", "RestartPolicy", "StragglerPolicy",
+           "StripeExchangeTimeout", "Supervisor", "TcpPageExchange",
+           "TcpStripeExchange", "allocate_ports", "chaos", "compat",
+           "decode_page_frame", "encode_page_frame", "fleet",
+           "parse_chaos", "plan_elastic_remesh", "read_heartbeat",
+           "split_spec_strings", "supervisor", "tree_fingerprint"]

@@ -31,6 +31,26 @@ Fault taxonomy (spec strings, parsed by :func:`parse_chaos`):
                                    half) — restore must detect it by CRC
                                    and fall back to an older intact step
 
+Serving-fleet faults (the multi-host serving fleet; see
+``repro.serving.fleet``, tick-indexed on the FLEET's tick clock):
+
+  ``die@T:host=H``                 serving host H dies entering fleet tick
+                                   T — the router must tombstone its
+                                   directory entries and re-admit its
+                                   in-flight requests on survivors
+                                   (worker mode: raises ChaosKilled so a
+                                   real serve process exits 43 and the
+                                   supervisor restarts it)
+  ``netsplit@T:host=H,duration=D`` the page-migration channel to/from
+                                   host H is black for D ticks starting
+                                   at T — migrations raise
+                                   PageExchangeTimeout and the router
+                                   must fall back to prefix recompute
+  ``pagecorrupt@T``                the next migrated KV page at tick >= T
+                                   arrives with a flipped byte — the
+                                   receiver's per-page CRC must reject it
+                                   (PageCorruptError) and recompute
+
 Process-level faults (the real-fleet runtime; see
 ``repro.runtime.supervisor``):
 
@@ -77,7 +97,8 @@ import numpy as np
 KILL_EXIT_CODE = 43
 
 KINDS = ("kill", "silence", "slow", "nan", "corrupt",
-         "sigkill", "partition", "diskfull")
+         "sigkill", "partition", "diskfull",
+         "die", "netsplit", "pagecorrupt")
 
 # Kinds the process supervisor applies itself (everything else is handed
 # through to the worker processes' --chaos flags).
@@ -88,7 +109,8 @@ SUPERVISOR_KINDS = ("sigkill",)
 _FOREVER = 1 << 30
 _DEFAULT_DURATION = {"kill": 1, "silence": _FOREVER, "slow": _FOREVER,
                      "nan": 1, "corrupt": 1, "sigkill": 1,
-                     "partition": _FOREVER, "diskfull": 1}
+                     "partition": _FOREVER, "diskfull": 1,
+                     "die": 1, "netsplit": 4, "pagecorrupt": 1}
 
 
 class ChaosKilled(SystemExit):
@@ -121,11 +143,13 @@ class ChaosSpec:
             object.__setattr__(self, "duration",
                                _DEFAULT_DURATION[self.kind])
         if self.host < 0:
-            # silence/slow/kill/sigkill/partition target a PEER by default
-            # (host 0 is "us" / the manifest writer); corrupt targets our
-            # own shard 0, diskfull our own writer
+            # silence/slow/kill/sigkill/partition/die/netsplit target a
+            # PEER by default (host 0 is "us" / the manifest writer /
+            # the serving fleet's first host); corrupt targets our own
+            # shard 0, diskfull our own writer, pagecorrupt the channel
             object.__setattr__(self, "host",
-                               0 if self.kind in ("corrupt", "diskfull")
+                               0 if self.kind in ("corrupt", "diskfull",
+                                                  "pagecorrupt")
                                else 1)
 
     def active(self, step: int) -> bool:
@@ -297,3 +321,46 @@ class ChaosInjector:
                 corrupt_checkpoint(ckpt_dir, saved_step, host_id=sp.host,
                                    mode=sp.mode, seed=self.seed)
                 self._log(f"corrupt@{saved_step}:mode={sp.mode}")
+
+    # -- serving-fleet fault points (fleet tick clock) ----------------------
+
+    def should_die(self, tick: int, host: int) -> bool:
+        """True exactly when serving host ``host`` must die entering fleet
+        tick ``tick`` (the router's view: it marks the host dead and starts
+        recovery).  Unlike ``maybe_kill`` this never raises — the in-process
+        LocalFleet has no process to kill, only an engine to drop."""
+        for sp in self._active("die", tick):
+            if sp.host == host:
+                self._log(f"die@{sp.step}:host={host}")
+                return True
+        return False
+
+    def maybe_die(self, tick: int, host: int) -> None:
+        """Worker-process flavour of ``should_die``: raises ChaosKilled so
+        a real serve worker exits with :data:`KILL_EXIT_CODE` and the
+        supervisor's restart policy takes over."""
+        if self.should_die(tick, host):
+            raise ChaosKilled(tick)
+
+    def netsplit_active(self, tick: int, host: int) -> bool:
+        """True while the page-migration channel to/from ``host`` is black
+        (netsplit window).  The PageExchange consults this on both send and
+        receive so a migration across the split times out symmetrically."""
+        for sp in self._active("netsplit", tick):
+            if sp.host == host:
+                self._log(f"netsplit@{sp.step}:host={host}")
+                return True
+        return False
+
+    def corrupt_next_page(self, tick: int) -> bool:
+        """True ONCE per pagecorrupt spec, the first time it is consulted
+        at tick >= the spec's step: the next migrated page frame gets one
+        byte flipped in flight, and the receiver's CRC must catch it."""
+        for sp in self.specs:
+            if sp.kind != "pagecorrupt" or tick < sp.step:
+                continue
+            event = f"pagecorrupt@{sp.step}"
+            if event not in self.fired:
+                self.fired.append(event)
+                return True
+        return False

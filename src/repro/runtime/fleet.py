@@ -18,6 +18,16 @@ is the glue that turns peers into actual processes:
   redundant full reads.  The TCP implementation is the real-process
   transport (loopback or NIC); the Local one drives the same code path
   with simulated hosts (threads) in tests and benchmarks.
+* :class:`TcpPageExchange` / :class:`LocalPageExchange` — POINT-TO-POINT
+  migration of serving KV pages between fleet hosts (the serving fleet in
+  ``serving/fleet.py``).  Where the stripe exchange all-gathers checkpoint
+  bytes, the page exchange moves one prefix's pages from the host that
+  OWNS them to the host that needs them — the paper's FIFO-mesh
+  promote-local-to-global story at page granularity.  Frames carry a CRC
+  per page (:func:`encode_page_frame`/:func:`decode_page_frame`);
+  :class:`PageExchangeTimeout` (unreachable peer / netsplit) is
+  deliberately distinct from :class:`PageCorruptError` (bad bytes) so the
+  router can tell "retry elsewhere" from "recompute".
 * :func:`tree_fingerprint` — an order-stable CRC over a pytree's leaf
   bytes, so two processes (or two runs) can assert bit-identical params
   by exchanging 16 hex chars instead of gigabytes.
@@ -160,12 +170,18 @@ class TcpStripeExchange:
     at different times.
     """
 
+    # extra seconds granted ONCE per fetch when the peer RESETS the
+    # connection (a restarting peer is not a missing peer; refused /
+    # plain timeouts get no grace — the peer was never there)
+    RECONNECT_GRACE_S = 5.0
+
     def __init__(self, rank: int, ports: list[int], *,
                  host: str = "127.0.0.1", timeout_s: float = 60.0):
         self.rank = rank
         self.ports = list(ports)
         self.host = host
         self.timeout_s = timeout_s
+        self.reconnects = 0             # reset-triggered deadline extensions
         self._cv = threading.Condition()
         self._published: dict[str, bytes] = {}
         self._closed = False
@@ -216,6 +232,7 @@ class TcpStripeExchange:
 
     def _fetch(self, peer: int, key: str, deadline: float) -> bytes:
         last_err: Exception | None = None
+        reconnected = False
         while time.monotonic() < deadline:
             try:
                 with socket.create_connection(
@@ -225,7 +242,20 @@ class TcpStripeExchange:
                     c.settimeout(max(0.1, deadline - time.monotonic()))
                     head = self._recv_exact(c, _LEN.size)
                     return self._recv_exact(c, _LEN.unpack(head)[0])
-            except OSError as e:                # refused / reset / timeout
+            except (ConnectionResetError, BrokenPipeError) as e:
+                # the peer WAS there and dropped us mid-exchange — likely a
+                # restart (supervisor bounce during striped restore).  One
+                # bounded reconnect: extend the deadline once so a transient
+                # bounce doesn't cost the caller a full-read fallback.
+                last_err = e
+                if not reconnected:
+                    reconnected = True
+                    self.reconnects += 1
+                    deadline = max(deadline, time.monotonic() +
+                                   min(self.RECONNECT_GRACE_S,
+                                       self.timeout_s))
+                time.sleep(0.05)
+            except OSError as e:                # refused / timeout
                 last_err = e
                 time.sleep(0.05)
         raise StripeExchangeTimeout(
@@ -265,6 +295,174 @@ class TcpStripeExchange:
             self._srv.close()
         except OSError:
             pass
+
+
+# ---------------------------------------------------------------------------
+# Page exchange: point-to-point migration of serving KV pages
+# ---------------------------------------------------------------------------
+
+_PAGE_MAGIC = b"PGX1"
+
+
+class PageExchangeTimeout(TimeoutError):
+    """The owning host never served the migrated pages in time (dead peer,
+    netsplit).  The router should fall back to recompute-from-longest-
+    surviving-ancestor — the page CONTENT is not suspect."""
+
+
+class PageCorruptError(RuntimeError):
+    """A migrated page frame failed its CRC: the bytes that arrived are
+    not the bytes that left.  Deliberately NOT a timeout — retrying the
+    same transfer may succeed, but this copy must never enter the pool."""
+
+
+def encode_page_frame(tokens, arrays) -> bytes:
+    """One migrated page as a self-describing wire frame: magic, the
+    page's token content, each pool entry's (key, dtype, shape, bytes),
+    and a trailing CRC32 over everything after the magic.  The CRC makes
+    corruption detectable at the RECEIVER, before the page touches the
+    pool — the serving analogue of the checkpoint commit-marker CRC."""
+    import numpy as np
+    toks = [int(t) for t in tokens]
+    body = bytearray()
+    body += struct.pack(">I", len(toks))
+    if toks:
+        body += struct.pack(f">{len(toks)}i", *toks)
+    body += struct.pack(">I", len(arrays))
+    for key in sorted(arrays):
+        arr = np.ascontiguousarray(np.asarray(arrays[key]))
+        kb, db = key.encode(), str(arr.dtype).encode()
+        body += struct.pack(">H", len(kb)) + kb
+        body += struct.pack(">H", len(db)) + db
+        body += struct.pack(">B", arr.ndim)
+        if arr.ndim:
+            body += struct.pack(f">{arr.ndim}I", *arr.shape)
+        raw = arr.tobytes()
+        body += struct.pack(">Q", len(raw)) + raw
+    return _PAGE_MAGIC + bytes(body) + struct.pack(
+        ">I", zlib.crc32(bytes(body)))
+
+
+def decode_page_frame(frame: bytes):
+    """Inverse of :func:`encode_page_frame`; raises
+    :class:`PageCorruptError` on any structural or CRC mismatch.
+    Returns ``(tokens, {key: np.ndarray})``."""
+    import numpy as np
+    if len(frame) < len(_PAGE_MAGIC) + 4 or \
+            not frame.startswith(_PAGE_MAGIC):
+        raise PageCorruptError("page frame: bad magic/header")
+    body, (crc,) = frame[len(_PAGE_MAGIC):-4], struct.unpack(
+        ">I", frame[-4:])
+    if zlib.crc32(body) != crc:
+        raise PageCorruptError("page frame: CRC mismatch")
+    off = 0
+
+    def take(n: int) -> bytes:
+        nonlocal off
+        if off + n > len(body):
+            raise PageCorruptError("page frame: truncated")
+        out = body[off:off + n]
+        off += n
+        return out
+
+    (n_toks,) = struct.unpack(">I", take(4))
+    tokens = struct.unpack(f">{n_toks}i", take(4 * n_toks)) \
+        if n_toks else ()
+    (n_arr,) = struct.unpack(">I", take(4))
+    arrays = {}
+    for _ in range(n_arr):
+        (kl,) = struct.unpack(">H", take(2))
+        key = take(kl).decode()
+        (dl,) = struct.unpack(">H", take(2))
+        dtype = take(dl).decode()
+        (nd,) = struct.unpack(">B", take(1))
+        shape = struct.unpack(f">{nd}I", take(4 * nd)) if nd else ()
+        (nb,) = struct.unpack(">Q", take(8))
+        arrays[key] = np.frombuffer(take(nb), dtype=dtype).reshape(shape)
+    return tokens, arrays
+
+
+def flip_frame_byte(frame: bytes) -> bytes:
+    """XOR one mid-body byte (the ``pagecorrupt`` chaos payload) — the
+    deterministic damage the receiver's CRC must catch."""
+    off = len(_PAGE_MAGIC) + (len(frame) - len(_PAGE_MAGIC) - 4) // 2
+    return frame[:off] + bytes([frame[off] ^ 0xFF]) + frame[off + 1:]
+
+
+class LocalPageExchange:
+    """In-process page-migration channel between the LocalFleet's hosts —
+    same decode/CRC path the TCP transport exercises, with injectable
+    fault hooks: ``blackout(host)`` (netsplit chaos: the transfer raises
+    :class:`PageExchangeTimeout`) and ``corrupt_hook()`` (pagecorrupt
+    chaos: one frame byte is flipped in flight).  Byte/frame counters
+    feed the fleet's ``page_exchange_bytes`` metric."""
+
+    def __init__(self):
+        self.blackout = None            # callable(host) -> bool
+        self.corrupt_hook = None        # callable() -> bool
+        self.bytes_sent = 0
+        self.frames_sent = 0
+
+    def transfer(self, src_host: int, dst_host: int, frames):
+        """Move encoded frames ``src -> dst``; returns the decoded
+        ``(tokens, arrays)`` list.  Counts bytes before decoding — the
+        wire carried them whether or not the CRC holds."""
+        if self.blackout is not None and (self.blackout(src_host)
+                                          or self.blackout(dst_host)):
+            raise PageExchangeTimeout(
+                f"netsplit: page channel {src_host}->{dst_host} is black")
+        out = []
+        for frame in frames:
+            if self.corrupt_hook is not None and self.corrupt_hook():
+                frame = flip_frame_byte(frame)
+            self.bytes_sent += len(frame)
+            self.frames_sent += 1
+            out.append(decode_page_frame(frame))
+        return out
+
+
+class TcpPageExchange(TcpStripeExchange):
+    """Point-to-point page migration over the stripe-exchange wire
+    protocol: the source PUBLISHES its encoded frames under a migration
+    key, the target FETCHES them from the source's port — no all-gather
+    barrier (migration is point-to-point, like the paper's mesh hops).
+    Inherits the server loop, length-prefixed framing, and the bounded
+    reconnect-on-reset from :class:`TcpStripeExchange`."""
+
+    def __init__(self, rank: int, ports: list[int], *,
+                 host: str = "127.0.0.1", timeout_s: float = 60.0):
+        super().__init__(rank, ports, host=host, timeout_s=timeout_s)
+        self.bytes_sent = 0
+        self.frames_sent = 0
+
+    def publish(self, key: str, frames) -> None:
+        payload = struct.pack(">I", len(frames)) + b"".join(
+            _LEN.pack(len(f)) + f for f in frames)
+        with self._cv:
+            self._published[key] = payload
+            self._cv.notify_all()
+
+    def fetch(self, peer: int, key: str, *,
+              timeout_s: float | None = None):
+        """Decoded ``(tokens, arrays)`` frames published by ``peer``
+        under ``key``; :class:`PageExchangeTimeout` when the peer never
+        serves them."""
+        deadline = time.monotonic() + (timeout_s if timeout_s is not None
+                                       else self.timeout_s)
+        try:
+            payload = self._fetch(peer, key, deadline)
+        except StripeExchangeTimeout as e:
+            raise PageExchangeTimeout(str(e)) from None
+        (n,) = struct.unpack(">I", payload[:4])
+        off, frames = 4, []
+        for _ in range(n):
+            (ln,) = _LEN.unpack(payload[off:off + _LEN.size])
+            off += _LEN.size
+            frames.append(payload[off:off + ln])
+            off += ln
+        self.bytes_sent += sum(len(f) for f in frames)
+        self.frames_sent += len(frames)
+        return [decode_page_frame(f) for f in frames]
 
 
 # ---------------------------------------------------------------------------

@@ -63,6 +63,7 @@ class RestartPolicy:
     backoff_jitter: float = 0.25       # +[0, jitter) * base, deterministic
     hang_timeout_s: float = 30.0       # quiet-heartbeat SIGKILL threshold
     term_grace_s: float = 5.0          # SIGTERM -> SIGKILL escalation
+    max_wall_s: float = 0.0            # whole-run ceiling; 0 = unbounded
 
     def backoff_s(self, attempt: int, *, seed: int = 0,
                   rank: int = 0) -> float:
@@ -345,6 +346,13 @@ class Supervisor:
             while any(w.state in ("running", "backoff", "new")
                       for w in self.workers):
                 now = time.time()
+                if 0 < self.policy.max_wall_s < now - t0:
+                    # a serving fleet wedged on a dead coordinator or a
+                    # migration loop must not hold CI hostage — same
+                    # clean-teardown path as the failure budget
+                    self._escalate("wall-clock ceiling "
+                                   f"{self.policy.max_wall_s:.0f}s")
+                    break
                 for w in self.workers:
                     if w.state == "backoff" and now >= w.resume_at:
                         # solo relaunch: same gang geometry, no chaos,

@@ -139,6 +139,15 @@ def _copy_pool_page(pool, src, dst):
     return {k: v.at[:, dst].set(v[:, src]) for k, v in pool.items()}
 
 
+@jax.jit
+def _write_pool_page(pool, dst, vals):
+    """Land a MIGRATED page's payload (all layers, K+V+scales) at
+    physical page ``dst`` — the receive half of fleet page migration.
+    One trace serves every import: ``dst`` rides traced."""
+    return {k: v.at[:, dst].set(vals[k].astype(v.dtype))
+            for k, v in pool.items()}
+
+
 def _pick_step(step, params, tokens, pool, pt, lens, counts):
     """paged_step plus the per-row next-token gather (each row's logits
     sit at ``counts[b] - 1``) and the greedy argmax, fused into ONE
@@ -741,6 +750,109 @@ class ServingEngine:
             req.generated.append(tok)
             if req.n_generated >= req.max_new_tokens or tok == cfg.eos_id:
                 self._finish(req)
+
+    # ------------------------------------------------------------------
+    # fleet surface (serving.fleet): cancel, in-flight audit, migration
+    # ------------------------------------------------------------------
+
+    def inflight(self) -> list[int]:
+        """rids submitted but not yet reaped into ``results`` — on host
+        loss the router re-admits exactly these on the survivors."""
+        if self.cfg.kv_mode == "dense":
+            live = [item[0] for item in self.queue]
+            live += [s.request_id for s in self.slots
+                     if s.request_id is not None]
+            return [rid for rid in live if rid not in self.results]
+        return [rid for rid in self._requests if rid not in self.results]
+
+    def cancel(self, rid: int) -> bool:
+        """Withdraw one unfinished request, releasing its pages (shared
+        prefix pages only decref).  The fleet retires the losing twin of
+        a hedged dispatch this way.  Returns True when something was
+        actually cancelled."""
+        if rid in self.results:
+            return False
+        if self.cfg.kv_mode == "dense":
+            for i, item in enumerate(self.queue):
+                if item[0] == rid:
+                    del self.queue[i]
+                    self.results[rid] = []
+                    self.outcomes[rid] = "cancelled"
+                    return True
+            for i, s in enumerate(self.slots):
+                if s.request_id == rid:
+                    self.results[rid] = list(s.generated)
+                    self.outcomes[rid] = "cancelled"
+                    self.slots[i] = _Slot()
+                    return True
+            return False
+        req = self._requests.get(rid)
+        if req is None or self.sched.cancel(self.kv, rid) is None:
+            return False
+        self.results[rid] = req.output
+        self.outcomes[rid] = "cancelled"
+        self.obs.counter("serve_requests", outcome="cancelled")
+        return True
+
+    def export_prefix_pages(self, tokens, n_tokens: int):
+        """Migration SOURCE: the KV payloads of the full-page cached
+        prefix of ``tokens[:n_tokens]``, as (segment tokens, {pool entry:
+        np.ndarray}) pairs in path order.  Stops at the first uncached or
+        partial page — callers migrate what exists and recompute the
+        rest."""
+        if getattr(self, "prefix", None) is None:
+            return []
+        out = []
+        for node in self.prefix.path_nodes(tokens, n_tokens):
+            vals = {k: np.asarray(v[:, node.page])
+                    for k, v in self.pool.items()}
+            out.append((node.tokens, vals))
+        return out
+
+    def import_prefix_pages(self, segments) -> int:
+        """Migration TARGET: graft exported page payloads into this
+        host's pool + trie so the next lookup serves them locally —
+        the page is TRANSFERRED, never re-prefilled.  Segments already
+        cached here are skipped; a dry pool ends the import early
+        (partial import is fine, the remainder is recomputed).  Returns
+        the prefix tokens now cached locally."""
+        if getattr(self, "prefix", None) is None:
+            return 0
+        node, matched = self.prefix.root, 0
+        ps = self.kv.cfg.page_size
+        for seg, vals in segments:
+            seg = tuple(int(t) for t in seg)
+            if len(seg) != ps:
+                break                        # only full pages migrate
+            child = node.children.get(seg)
+            if child is not None and child.n_tokens == ps:
+                node, matched = child, matched + ps
+                continue
+            try:
+                page = self.kv.adopt_page()
+            except MemoryError:
+                break
+            ctx = self._mesh_ctx()
+            try:
+                if ctx is not None:
+                    ctx.__enter__()
+                self.pool = _write_pool_page(
+                    self.pool, jnp.asarray(page, jnp.int32),
+                    {k: jnp.asarray(v) for k, v in vals.items()})
+            finally:
+                if ctx is not None:
+                    ctx.__exit__(None, None, None)
+            node = self.prefix.adopt_segment(node, seg, page)
+            matched += ps
+        return matched
+
+    def drop_prefix_path(self, tokens, n_tokens: int) -> int:
+        """Migration SOURCE, after a successful transfer: drop the local
+        trie path for the migrated prefix (ownership moved — pages are
+        owned once).  Pages still feeding live slots survive."""
+        if getattr(self, "prefix", None) is None:
+            return 0
+        return self.prefix.drop_path(tokens, n_tokens)
 
     # ------------------------------------------------------------------
     # accounting

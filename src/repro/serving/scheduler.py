@@ -313,6 +313,30 @@ class PhaseScheduler:
             heapq.heapify(self._waiting)
         return expired
 
+    def cancel(self, kv: BlockPoolKV, rid: int) -> Request | None:
+        """Withdraw one request wherever it lives: an active slot releases
+        its pages (shared prefix pages only decref — the trie and peer
+        slots keep theirs), a waiting entry leaves the queue.  The fleet's
+        hedged dispatch uses this to retire the losing twin once the first
+        copy finishes.  Returns the cancelled request, or None when the
+        rid is unknown or already finished."""
+        for req in list(self._active.values()):
+            if req.rid == rid:
+                self._drop_cow(kv, req)
+                kv.free_slot(req.slot, evicted=True)
+                del self._active[req.slot]
+                req.slot = -1
+                req.phase = Phase.FINISHED
+                return req
+        for _, _, req in self._waiting:
+            if req.rid == rid and req.phase is Phase.WAITING:
+                req.phase = Phase.FINISHED
+                self._waiting = [it for it in self._waiting
+                                 if it[2].phase is Phase.WAITING]
+                heapq.heapify(self._waiting)
+                return req
+        return None
+
     def shed_waiting(self, *, below_priority: int) -> list[Request]:
         """Load-shed mode: drop every WAITING request with priority below
         the floor (admitted work keeps running — shedding protects the

@@ -419,6 +419,62 @@ def test_load_shed_mode_under_sustained_pool_pressure():
     assert len(res[a]) == 24 and len(res[b]) == 24
 
 
+def test_seeded_burst_composes_backoff_shed_and_preemption():
+    """One seeded burst must light up every pressure valve AT ONCE — the
+    degradation paths are only trustworthy composed, not just in the
+    isolated single-mechanism tests above: admission backoff (a retried
+    request eventually admits and completes), preemption by page pressure
+    (a high-priority late arrival evicts a low-priority victim), and
+    load-shed mode (sub-priority waiting work dropped wholesale) — with
+    every request reaching exactly one outcome and pool + trie invariants
+    intact."""
+    from repro.launch.serve import build_engine
+    engine, vocab = build_engine(
+        "qwen3-4b", slots=3, max_len=64, max_new=8, kv_mode="paged",
+        page_size=8, num_pages=11, max_admission_retries=6,
+        admission_backoff=1, shed_pressure=0.85, shed_patience=4,
+        shed_min_priority=1)
+    rng = np.random.default_rng(9)
+
+    def sub(n_tokens, priority):
+        return engine.submit(rng.integers(0, vocab, n_tokens)
+                             .astype(np.int32), priority=priority)
+
+    # t=0 burst: three low-priority requests fill the slots and 9 of the
+    # 10 usable pages (2 prompt pages + 1 headroom each)
+    victims = [sub(12, 0), sub(12, 0), sub(12, 0)]
+    for _ in range(2):
+        engine.step()
+    # late arrivals against a hot pool: the VIPs preempt every victim,
+    # the mid-priority request finds only VIPs active (nothing evictable
+    # below it) and must back off, the sub-priority pair is shed bait
+    vips = [sub(12, 5), sub(12, 5), sub(12, 5)]
+    backoff = sub(12, 2)
+    doomed = [sub(16, 0), sub(16, 0)]
+    res = engine.run()
+
+    stats = engine.degradation_stats()
+    counts = {k: stats[k] for k in ("ok", "timeout", "shed")}
+    assert sum(counts.values()) == 9       # every rid reached one outcome
+    # high priority never preempted, full output
+    for vip in vips:
+        assert engine.outcomes[vip] == "ok" and len(res[vip]) == 8
+        assert engine._requests[vip].preemptions == 0
+    # preemption-by-page-pressure fired on the low-priority victims
+    assert engine.kv_stats()["evictions"] >= 1
+    assert max(engine._requests[r].preemptions for r in victims) >= 1
+    # admission backoff fired (next_admit_tick is only ever set by the
+    # hold-off path; admit_attempts resets to 0 on the admission that
+    # finally lands) and the retried request still completed
+    assert engine._requests[backoff].next_admit_tick > 0
+    assert engine.outcomes[backoff] == "ok" and len(res[backoff]) == 8
+    # sustained pressure tripped shed mode and dropped sub-priority work
+    assert stats["shed_mode_ticks"] >= 1
+    assert counts["shed"] >= 1
+    assert all(engine.outcomes[r] in ("ok", "shed") for r in doomed)
+    engine.check_kv()                      # no page leaked through any path
+
+
 def test_dense_deadline_timeout():
     """The dense path honours deadlines too: queued requests past deadline
     never start; a decoding slot past deadline frees with its partial
@@ -658,6 +714,54 @@ def test_preemption_shared_prefix_pages_only_decref():
     # drain: peer finishes, trie evicts -> pool returns to empty
     sched.finish(kv, r2)
     assert all(kv.refcount[p] == 1 for p in shared)
+    pc.evict(100)
+    assert kv.free_pages == kv.cfg.total_pages - 1
+
+
+def test_deadline_eviction_shared_prefix_pages_only_decref():
+    """The deadline-expiry path must obey the same sharing contract as
+    preemption: a timed-out request whose leading pages are radix-cache
+    mappings shared with a live peer only DROPS ITS REFERENCES — exactly
+    its private pages return to the free list, the peer's mapping and the
+    trie are untouched, and a waiting expiree releases nothing (it never
+    held pages)."""
+    kv = BlockPoolKV(_kvcfg(num_slots=2, num_pages=17))
+    pc = RadixPrefixCache(kv)
+    prefix = list(range(16))                      # two full shared pages
+    kv.ensure(0, 16)
+    kv.advance(0, 16)
+    pc.insert(prefix, kv.slot_pages(0), 16)
+    kv.free_slot(0)
+
+    sched = PhaseScheduler(SchedulerConfig(num_slots=2))
+    doomed = Request(rid=1, prompt=np.asarray(prefix + [7, 8], np.int32),
+                     arrival=0, max_new_tokens=4, deadline_tick=5)
+    peer = Request(rid=2, prompt=np.asarray(prefix + [9], np.int32),
+                   arrival=1, max_new_tokens=4)
+    queued = Request(rid=3, prompt=np.asarray(prefix + [4], np.int32),
+                     arrival=2, max_new_tokens=4, deadline_tick=5)
+    sched.submit(doomed)
+    sched.submit(peer)
+    sched.submit(queued)                          # both slots taken: waits
+    assert len(sched.admit(kv, prefix=pc)) == 2
+    shared = [int(p) for p in kv.slot_pages(doomed.slot)[:2]]
+    assert shared == [int(p) for p in kv.slot_pages(peer.slot)[:2]]
+    assert all(kv.refcount[p] == 3 for p in shared)   # trie + both slots
+    peer_pages = kv.slot_pages(peer.slot)
+    free_before = kv.free_pages
+
+    expired = sched.expire_deadlines(kv, now=6)
+    assert sorted(r.rid for r in expired) == [1, 3]
+    # ONLY the expiree's references dropped; the shared pages never hit
+    # the free list and the peer decodes on from the same physical pages
+    assert all(kv.refcount[p] == 2 for p in shared)
+    assert kv.slot_pages(peer.slot) == peer_pages
+    # doomed's 18-token prompt mapped 3 pages + 1 headroom; 2 were shared,
+    # so exactly its 2 PRIVATE pages come back (the waiting expiree adds 0)
+    assert kv.free_pages == free_before + 2
+    assert pc.match(prefix + [55]).matched_full == 16   # cache intact
+    pc.check_invariants()
+    sched.finish(kv, peer)
     pc.evict(100)
     assert kv.free_pages == kv.cfg.total_pages - 1
 

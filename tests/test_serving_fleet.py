@@ -1,0 +1,489 @@
+"""Fault-tolerant serving fleet: page-ownership directory, KV page
+migration, and chaos-driven request recovery.
+
+Covers the acceptance checklist of the serving-fleet PR: the wire frame's
+CRC (round-trip, flipped byte, truncation), directory ownership rules
+(first-live-publisher-wins, tombstones, revive, transfer), the migration
+drill (pages MOVE over the exchange — ``page_exchange_bytes`` > 0 and a
+directory hit rate > 0 in the metrics registry — instead of being
+re-prefilled), and the differential property under chaos: for every
+request the fleet completes, its greedy tokens equal the single-engine
+baseline's — with hosts dying, the migration channel netsplit, or pages
+corrupted in flight.
+"""
+import functools
+import json
+import os
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import Telemetry
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime.chaos import ChaosInjector
+from repro.runtime.fleet import (LocalPageExchange, PageCorruptError,
+                                 PageExchangeTimeout, StripeExchangeTimeout,
+                                 TcpPageExchange, TcpStripeExchange,
+                                 allocate_ports, decode_page_frame,
+                                 encode_page_frame, flip_frame_byte)
+from repro.serving import (DirectoryMatch, FleetConfig, LocalFleet,
+                           PageOwnershipDirectory)
+
+PAGE = 8
+
+
+# ---------------------------------------------------------------------------
+# page frames: CRC round-trip + corruption detection (jax-free)
+# ---------------------------------------------------------------------------
+
+def _frame(seed=0):
+    rng = np.random.default_rng(seed)
+    arrays = {"k": rng.normal(size=(2, PAGE, 2, 4)).astype(np.float32),
+              "v": rng.integers(-127, 127, (2, PAGE, 2, 4)).astype(np.int8)}
+    tokens = tuple(int(t) for t in rng.integers(0, 999, PAGE))
+    return tokens, arrays
+
+
+def test_page_frame_round_trip_preserves_dtype_and_shape():
+    tokens, arrays = _frame()
+    got_tokens, got = decode_page_frame(encode_page_frame(tokens, arrays))
+    assert got_tokens == tokens
+    assert set(got) == set(arrays)
+    for k in arrays:
+        assert got[k].dtype == arrays[k].dtype
+        np.testing.assert_array_equal(got[k], arrays[k])
+
+
+def test_page_frame_crc_rejects_flip_truncation_and_bad_magic():
+    tokens, arrays = _frame()
+    frame = encode_page_frame(tokens, arrays)
+    with pytest.raises(PageCorruptError, match="CRC"):
+        decode_page_frame(flip_frame_byte(frame))
+    with pytest.raises(PageCorruptError):
+        decode_page_frame(frame[:len(frame) // 2])
+    with pytest.raises(PageCorruptError, match="magic"):
+        decode_page_frame(b"NOPE" + frame[4:])
+    # timeouts and corruption are DIFFERENT failures: one retries, the
+    # other must never enter a pool
+    assert issubclass(PageExchangeTimeout, TimeoutError)
+    assert not issubclass(PageCorruptError, TimeoutError)
+
+
+def test_local_page_exchange_netsplit_and_corrupt_hooks():
+    tokens, arrays = _frame()
+    frame = encode_page_frame(tokens, arrays)
+    ex = LocalPageExchange()
+    out = ex.transfer(0, 1, [frame])
+    assert out[0][0] == tokens and ex.bytes_sent == len(frame)
+    ex.blackout = lambda h: h == 1
+    with pytest.raises(PageExchangeTimeout, match="netsplit"):
+        ex.transfer(0, 1, [frame])
+    ex.blackout = None
+    ex.corrupt_hook = lambda: True
+    with pytest.raises(PageCorruptError):
+        ex.transfer(0, 1, [frame])
+
+
+def test_tcp_page_exchange_publish_fetch():
+    tokens, arrays = _frame()
+    frames = [encode_page_frame(tokens, arrays),
+              encode_page_frame(tokens[:4], {"k": arrays["k"]})]
+    ports = allocate_ports(2)
+    exs = [TcpPageExchange(r, ports, timeout_s=20) for r in range(2)]
+    try:
+        exs[0].publish("mig:0", frames)
+        got = exs[1].fetch(0, "mig:0")
+        assert [g[0] for g in got] == [tokens, tokens[:4]]
+        np.testing.assert_array_equal(got[0][1]["v"], arrays["v"])
+        assert exs[1].frames_sent == 2
+        with pytest.raises(PageExchangeTimeout):
+            exs[1].fetch(0, "never-published", timeout_s=0.3)
+    finally:
+        for ex in exs:
+            ex.close()
+
+
+# ---------------------------------------------------------------------------
+# stripe exchange: bounded reconnect on connection reset
+# ---------------------------------------------------------------------------
+
+def _flaky_peer(port, payload, n_resets, stop):
+    """A fake peer that RST-closes the first ``n_resets`` connections,
+    then serves ``payload`` under any key — a supervisor-bounced rank."""
+    srv = socket.socket()
+    srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    srv.bind(("127.0.0.1", port))
+    srv.listen(8)
+    srv.settimeout(0.1)
+    resets = 0
+    while not stop.is_set():
+        try:
+            conn, _ = srv.accept()
+        except socket.timeout:
+            continue
+        if resets < n_resets:
+            resets += 1
+            conn.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                            struct.pack("ii", 1, 0))   # close -> RST
+            conn.close()
+            continue
+        buf = b""
+        while not buf.endswith(b"\n"):
+            buf += conn.recv(256)
+        conn.sendall(struct.pack(">Q", len(payload)) + payload)
+        conn.close()
+        break
+    srv.close()
+
+
+def _with_flaky_peer(n_resets, timeout_s):
+    ports = allocate_ports(2)
+    ex = TcpStripeExchange(0, ports, timeout_s=timeout_s)
+    stop = threading.Event()
+    t = threading.Thread(target=_flaky_peer,
+                         args=(ports[1], b"peer-bytes", n_resets, stop),
+                         daemon=True)
+    t.start()
+    try:
+        return ex, ex.allgather("k", 0, 2, b"mine")
+    finally:
+        stop.set()
+        t.join(timeout=5)
+        ex.close()
+
+
+def test_stripe_exchange_reconnects_once_after_reset():
+    """A peer that resets ONE connection (restart mid-exchange) costs a
+    bounded grace, not a StripeExchangeTimeout."""
+    ex, out = _with_flaky_peer(n_resets=1, timeout_s=10)
+    assert out == [b"mine", b"peer-bytes"]
+    assert ex.reconnects == 1
+
+
+def test_stripe_exchange_reset_grace_is_granted_once():
+    """A peer that NEVER stops resetting still times out — the grace is
+    one bounded extension, not a retry loop."""
+    t0 = time.monotonic()
+    with pytest.raises(StripeExchangeTimeout):
+        _with_flaky_peer(n_resets=10_000, timeout_s=0.4)
+    # one grace of min(RECONNECT_GRACE_S, timeout_s): well under 5s total
+    assert time.monotonic() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------------
+# page-ownership directory (jax-free)
+# ---------------------------------------------------------------------------
+
+def _toks(n, base=0):
+    return list(range(base, base + n))
+
+
+def test_directory_first_live_publisher_wins_and_lookup_caps():
+    d = PageOwnershipDirectory(PAGE)
+    assert d.publish(_toks(2 * PAGE), host=0) == 2
+    assert d.publish(_toks(2 * PAGE), host=1) == 0   # owned once
+    # last token always recomputed: exactly 2*PAGE tokens match only one
+    # full page (same len-1 rule as the local trie)
+    m = d.lookup(_toks(2 * PAGE))
+    assert m.hit and m.owners == (0,) and m.matched == PAGE
+    m3 = d.lookup(_toks(3 * PAGE))
+    assert m3.matched == 2 * PAGE
+    assert d.lookup(_toks(PAGE, base=500)).hit is False
+    assert d.stats()["hit_rate"] == pytest.approx(2 / 3)
+
+
+def test_directory_tombstone_stops_lookup_at_surviving_ancestor():
+    d = PageOwnershipDirectory(PAGE)
+    seq = _toks(3 * PAGE + 1)
+    d.publish(seq[:PAGE], host=0)
+    d.publish(seq, host=1)          # host 1 owns pages 2..3
+    assert d.tombstone_host(1) == 2
+    m = d.lookup(seq)
+    assert m.owners == (0,) and m.matched == PAGE   # survivor's page only
+    # a survivor recomputing the prefix revives the dead entries
+    assert d.publish(seq, host=2) == 2
+    assert d.lookup(seq).owners == (0, 2, 2)
+    assert d.stats()["revived_pages"] == 2
+    with pytest.raises(ValueError, match="tombstoned"):
+        d.publish(seq, host=1)
+
+
+def test_directory_transfer_moves_ownership():
+    d = PageOwnershipDirectory(PAGE)
+    seq = _toks(2 * PAGE + 1)
+    d.publish(seq, host=0)
+    assert d.transfer(seq, 2 * PAGE, new_host=3) == 2
+    assert d.lookup(seq).owners == (3, 3)
+    assert d.owners() == {3: 2}
+    assert d.stats()["transferred_pages"] == 2
+
+
+def test_directory_match_defaults_are_a_miss():
+    m = DirectoryMatch()
+    assert not m.hit and m.matched == 0
+
+
+# ---------------------------------------------------------------------------
+# fleet fixtures: engines sharing one bundle + params
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def _shared_model():
+    import jax
+
+    from repro.configs import get_bundle
+    from repro.launch.serve import _BundleAdapter
+    bundle = get_bundle("qwen3-4b", smoke=True)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    return _BundleAdapter(bundle, {}), params, bundle.cfg.vocab
+
+
+def _mk_engines(n, **kw):
+    from repro.serving import ServeConfig, ServingEngine
+    adapter, params, _ = _shared_model()
+    base = dict(batch=2, max_len=64, max_new_tokens=4,
+                kv_mode="paged", page_size=PAGE)
+    base.update(kw)
+    return [ServingEngine(adapter, params, ServeConfig(**base))
+            for _ in range(n)]
+
+
+@functools.lru_cache(maxsize=1)
+def _canonical():
+    """4 prompts sharing a 3-page prefix + the single-engine baseline."""
+    _, _, vocab = _shared_model()
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, vocab, 3 * PAGE)
+    prompts = tuple(
+        tuple(int(t) for t in np.concatenate(
+            [shared, rng.integers(1, vocab, 6)]))
+        for _ in range(4))
+    (engine,) = _mk_engines(1)
+    rids = [engine.submit(np.asarray(p, np.int32)) for p in prompts]
+    engine.run()
+    baseline = {i: engine.results[r] for i, r in enumerate(rids)}
+    return prompts, baseline
+
+
+def _fleet(n_hosts=2, chaos=None, registry=None, **cfg_kw):
+    cfg_kw.setdefault("placement", "round_robin")
+    tel = Telemetry(enabled=True,
+                    registry=registry if registry is not None
+                    else MetricsRegistry())
+    return LocalFleet(_mk_engines(n_hosts), FleetConfig(**cfg_kw),
+                      chaos=chaos, telemetry=tel)
+
+
+def _submit_in_waves(fleet, prompts, wave=2, settle_ticks=None):
+    """Arrivals over time — the first wave publishes its prefix to the
+    directory before the second wave's placement consults it (a same-tick
+    burst would find an empty directory and never migrate)."""
+    rids = []
+    for i in range(0, len(prompts), wave):
+        if rids:
+            if settle_ticks is None:
+                fleet.run()
+            else:
+                for _ in range(settle_ticks):
+                    fleet.step()
+        rids += [fleet.submit(p) for p in prompts[i:i + wave]]
+    fleet.run()
+    return rids
+
+
+# ---------------------------------------------------------------------------
+# the migration drill + the differential property
+# ---------------------------------------------------------------------------
+
+def test_fleet_migrates_pages_instead_of_reprefilling():
+    """Seeded drill: the second wave lands on the OTHER host, its shared
+    prefix MOVES over the exchange (bytes on the wire, ownership
+    transferred, source path dropped), and every request's tokens still
+    equal the single-engine baseline's."""
+    prompts, baseline = _canonical()
+    reg = MetricsRegistry()
+    fleet = _fleet(2, chaos=ChaosInjector([], seed=0), registry=reg)
+    rids = _submit_in_waves(fleet, prompts)
+    for i, r in enumerate(rids):
+        assert fleet.outcomes[r] == "ok"
+        assert fleet.results[r] == baseline[i], i
+    st = fleet.stats()
+    assert st["migrations"]["ok"] >= 1
+    assert st["page_exchange_bytes"] > 0
+    assert st["migrated_pages"] >= 1
+    assert st["directory"]["hit_rate"] > 0
+    assert st["directory"]["transferred_pages"] >= 1
+    # the acceptance criterion reads these from the obs registry
+    snap = fleet.telemetry() and reg.snapshot()
+    assert snap["counters"]["page_exchange_bytes"] > 0
+    assert snap["counters"]["fleet_migrations{outcome=ok}"] >= 1
+    assert snap["gauges"]["fleet.directory.hit_rate"] > 0
+    assert snap["gauges"]["fleet.page_exchange_bytes"] > 0
+    assert "fleet_migration_s" in snap["histograms"]
+    for eng in fleet.engines:     # pools + tries intact after migration
+        eng.check_kv()
+
+
+def test_fleet_die_chaos_differential():
+    """Host 0 dies mid-serve: its directory entries tombstone, its
+    in-flight requests re-admit on the survivor, and every COMPLETED
+    request still matches the baseline token-for-token."""
+    prompts, baseline = _canonical()
+    chaos = ChaosInjector(["die@3:host=0"], seed=0)
+    fleet = _fleet(2, chaos=chaos)
+    rids = _submit_in_waves(fleet, prompts, settle_ticks=2)
+    assert "die@3:host=0" in chaos.fired
+    st = fleet.stats()
+    assert st["deaths"] == 1 and st["live_hosts"] == 1
+    assert st["directory"]["tombstoned_pages"] >= 0
+    done = 0
+    for i, r in enumerate(rids):
+        if fleet.outcomes.get(r) == "ok":
+            assert fleet.results[r] == baseline[i], i
+            done += 1
+    assert done >= 1                       # the survivor kept serving
+    assert st["retries"] >= 1              # orphans were re-admitted
+    # recovery latency was measured for the re-admitted requests
+    snap = fleet.telemetry() and fleet.metrics.snapshot()
+    assert snap["histograms"]["fleet_recovery_ticks"]["count"] >= 1
+    fleet.engines[1].check_kv()
+
+
+def test_fleet_netsplit_degrades_migration_to_recompute():
+    """A netsplit across the dispatch window blacks out the page channel:
+    migrations time out (never PageCorruptError), the router recomputes
+    the prefix locally, and the tokens are still right."""
+    prompts, baseline = _canonical()
+    chaos = ChaosInjector(["netsplit@1:host=1,duration=200"], seed=0)
+    fleet = _fleet(2, chaos=chaos)
+    rids = _submit_in_waves(fleet, prompts)
+    for i, r in enumerate(rids):
+        assert fleet.results[r] == baseline[i], i
+    st = fleet.stats()
+    assert st["migrations"]["timeout"] >= 1
+    assert st["migrations"]["corrupt"] == 0
+    assert st["migrations"]["ok"] == 0
+    assert st["page_exchange_bytes"] == 0       # nothing crossed the split
+    assert any(f.startswith("netsplit@1") for f in chaos.fired)
+
+
+def test_fleet_pagecorrupt_crc_rejects_and_recomputes():
+    """A frame corrupted in flight is rejected by the receiver's CRC —
+    the damaged page never enters the pool, the request recomputes and
+    still matches the baseline."""
+    prompts, baseline = _canonical()
+    chaos = ChaosInjector(["pagecorrupt@1"], seed=0)
+    fleet = _fleet(2, chaos=chaos)
+    rids = _submit_in_waves(fleet, prompts)
+    for i, r in enumerate(rids):
+        assert fleet.results[r] == baseline[i], i
+    st = fleet.stats()
+    assert st["migrations"]["corrupt"] >= 1
+    assert "pagecorrupt@1" in chaos.fired
+    for eng in fleet.engines:
+        eng.check_kv()          # the rejected page left no pool damage
+
+
+def test_fleet_hedged_twin_first_writer_wins():
+    """With an aggressive hedge deadline every request gets a twin on the
+    other host; exactly one copy's tokens surface and the loser is
+    cancelled (its pages released)."""
+    prompts, baseline = _canonical()
+    fleet = _fleet(2, hedge_after=1, migrate=False)
+    rids = [fleet.submit(p) for p in prompts]
+    fleet.run()
+    assert fleet.stats()["hedges"] >= 1
+    for i, r in enumerate(rids):
+        assert fleet.outcomes[r] == "ok"
+        assert fleet.results[r] == baseline[i], i
+    for eng in fleet.engines:
+        eng.check_kv()
+        assert "cancelled" not in fleet.outcomes.values()
+
+
+def test_fleet_retry_budget_exhausted_fails_closed():
+    """Every host dies and the retry budget is zero: the orphaned
+    requests fail CLOSED (outcome ``failed``, empty tokens) instead of
+    hanging the router."""
+    prompts, _ = _canonical()
+    chaos = ChaosInjector(["die@2:host=0", "die@2:host=1"], seed=0)
+    fleet = _fleet(2, chaos=chaos, max_retries=0)
+    rids = [fleet.submit(p) for p in prompts]
+    fleet.run()
+    assert fleet.stats()["live_hosts"] == 0
+    for r in rids:
+        assert fleet.outcomes[r] == "failed"
+        assert fleet.results[r] == []
+    assert fleet.stats()["outcomes"]["failed"] == len(rids)
+
+
+def test_fleet_rejects_dense_engines_and_mismatched_pages():
+    from repro.serving import ServeConfig, ServingEngine
+    adapter, params, _ = _shared_model()
+    dense = ServingEngine(adapter, params,
+                          ServeConfig(batch=2, max_len=64,
+                                      max_new_tokens=2, kv_mode="dense"))
+    with pytest.raises(ValueError, match="paged"):
+        LocalFleet([dense])
+    with pytest.raises(ValueError, match="page_size"):
+        LocalFleet(_mk_engines(1) + _mk_engines(1, page_size=16))
+    with pytest.raises(ValueError, match="placement"):
+        LocalFleet(_mk_engines(1), FleetConfig(placement="nope"))
+
+
+def test_engine_export_import_round_trip():
+    """The engine-level migration surface: pages exported from one host's
+    trie and imported into another's give the importer a REAL prefix hit
+    (no prefill of the shared tokens) with byte-identical results."""
+    prompts, baseline = _canonical()
+    src, dst = _mk_engines(2)
+    rid = src.submit(np.asarray(prompts[0], np.int32))
+    src.run()
+    assert src.results[rid] == baseline[0]
+    exported = src.export_prefix_pages(np.asarray(prompts[0], np.int32),
+                                       3 * PAGE)
+    assert len(exported) == 3
+    frames = [encode_page_frame(t, a) for t, a in exported]
+    decoded = [decode_page_frame(f) for f in frames]
+    assert dst.import_prefix_pages(decoded) == 3 * PAGE
+    before = dst.prefix_stats()["matched_tokens"]
+    rid2 = dst.submit(np.asarray(prompts[1], np.int32))
+    dst.run()
+    assert dst.results[rid2] == baseline[1]
+    assert dst.prefix_stats()["matched_tokens"] - before >= 3 * PAGE - 1
+    src.check_kv()
+    dst.check_kv()
+
+
+# ---------------------------------------------------------------------------
+# the real-process fleet CLI (supervisor + serve workers)
+# ---------------------------------------------------------------------------
+
+def test_serve_fleet_cli_survives_worker_death(tmp_path):
+    """``--fleet 2`` with die chaos: the targeted worker exits 43, the
+    supervisor restarts it without chaos, and the merged results cover
+    every request."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-4b",
+         "--fleet", "2", "--requests", "4", "--kv-mode", "paged",
+         "--page-size", "8", "--slots", "2", "--max-new", "4",
+         "--prefix-share", "0.5", "--chaos", "die@2:host=1",
+         "--fleet-dir", str(tmp_path), "--max-wall-s", "300"],
+        env=env, capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "outcome=completed" in out.stdout
+    assert "served=4/4" in out.stdout
+    merged = {}
+    for tag in range(2):
+        with open(tmp_path / "results" / f"rank_{tag}.json") as f:
+            merged.update(json.load(f)["results"])
+    assert sorted(merged) == ["0", "1", "2", "3"]
+    assert all(len(v) == 4 for v in merged.values())
